@@ -1,0 +1,72 @@
+"""Table 1 validation: measured call counts vs the BSP cost model.
+
+Dense-engine evaluation counts are exact (k passes over the candidate
+pool), so leaf calls must equal Σ_i (pool_i − i) ≈ k·n/m and interior calls
+≈ k·(b·k); the lazy engine must always evaluate fewer. Communication is
+k·δ per edge.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import build, instances
+from repro.core.simulate import run_tree_dense, run_tree_lazy
+from repro.core.tree import AccumulationTree
+
+
+def run(full: bool = False):
+    spec = instances(full)["retail-like"]
+    sparse, bm, universe = build("retail-like", spec)
+    n = len(sparse)
+    rows = []
+    for m, b, k in ((8, 2, 32), (16, 4, 16), (8, 8, 64)):
+        tree = AccumulationTree(m, b)
+        dense = run_tree_dense("kcover", bm, k, tree, seed=3,
+                               universe=universe)
+        lazy = run_tree_lazy("kcover", sparse, k, tree, seed=3,
+                             universe=universe)
+        leaf_meas = np.mean([v for (lvl, _), v in
+                             dense.per_node_evals.items() if lvl == 0])
+        # model: Σ_{i<k}(n/m − i) (pool shrinks by one per pick)
+        nm = n / m
+        leaf_model = sum(max(nm - i, 0) for i in range(k))
+        interior = [v for (lvl, _), v in dense.per_node_evals.items()
+                    if lvl > 0]
+        int_meas = np.mean(interior)
+        int_model = sum(max(b * k - i, 0) for i in range(k))
+        rows.append(dict(m=m, b=b, k=k,
+                         leaf_measured=leaf_meas, leaf_model=leaf_model,
+                         interior_measured=int_meas, interior_model=int_model,
+                         lazy_total=lazy.evals_total,
+                         dense_total=dense.evals_total,
+                         comm_elements=dense.comm_elements,
+                         comm_model=sum(
+                             min(b, len(tree.children_of(l, nid))) * k
+                             for l in range(1, tree.num_levels + 1)
+                             for nid in tree.nodes_at_level(l))))
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print("m,b,k,leaf_measured,leaf_model,interior_measured,interior_model,"
+          "lazy_total,dense_total,comm_elements,comm_model")
+    ok = True
+    for r in rows:
+        print(f"{r['m']},{r['b']},{r['k']},{r['leaf_measured']:.0f},"
+              f"{r['leaf_model']:.0f},{r['interior_measured']:.0f},"
+              f"{r['interior_model']:.0f},{r['lazy_total']},"
+              f"{r['dense_total']},{r['comm_elements']},{r['comm_model']}")
+        ok &= abs(r["leaf_measured"] - r["leaf_model"]) / r["leaf_model"] < 0.1
+        ok &= r["interior_measured"] <= r["interior_model"] * 1.05
+        ok &= r["lazy_total"] < r["dense_total"]
+    print(f"# BSP model agreement: {'PASS' if ok else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(ap.parse_args().full)

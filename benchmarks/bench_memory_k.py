@@ -1,0 +1,73 @@
+"""Fig. 5 reproduction: varying k under a per-machine memory limit.
+
+m = 16 machines, limit = (scaled) bytes per machine. For each k, pick the
+LOWEST-DEPTH accumulation tree whose interior nodes fit (paper's strategy:
+largest feasible branching factor), then report critical-path calls and
+function value relative to Greedy. RandGreedi (b=16) becomes infeasible as
+k grows — exactly the paper's OOM story.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+from typing import Optional
+
+from benchmarks.common import build, instances
+from repro.core.simulate import run_greedy_lazy, run_tree_lazy
+from repro.core.tree import AccumulationTree
+
+
+def node_bytes(b: int, k: int, delta: float, elem_bytes: float = 8.0) -> float:
+    """Accumulation-node footprint: b·k elements × δ adjacency entries."""
+    return b * k * delta * elem_bytes
+
+
+def feasible_tree(m: int, k: int, delta: float, limit: float
+                  ) -> Optional[AccumulationTree]:
+    for b in sorted({2 ** i for i in range(1, int(math.log2(m)) + 1)} | {m},
+                    reverse=True):
+        if b <= m and node_bytes(b, k, delta) <= limit:
+            return AccumulationTree(m, b)
+    return None
+
+
+def run(full: bool = False, m: int = 16, limit_mb: float = 0.25):
+    spec = instances(full)["road-like"]
+    sparse, _, universe = build("road-like", spec)
+    delta = sum(len(s) for s in sparse) / len(sparse)
+    limit = limit_mb * 2 ** 20
+    rows = []
+    n = len(sparse)
+    for k in (n // 64, n // 32, n // 16, n // 8, n // 4):
+        g = run_greedy_lazy(spec["objective"], sparse, k, universe=universe)
+        rg_bytes = node_bytes(m, k, delta)
+        tree = feasible_tree(m, k, delta, limit)
+        row = dict(k=k, randgreedi_feasible=rg_bytes <= limit,
+                   rg_node_mb=rg_bytes / 2 ** 20)
+        if tree is None:
+            row.update(L=None, b=None, rel_calls=None, rel_value=None)
+        else:
+            res = run_tree_lazy(spec["objective"], sparse, k, tree, seed=1,
+                                universe=universe)
+            row.update(L=tree.num_levels, b=tree.b,
+                       rel_calls=res.evals_critical / max(g.evals_critical, 1),
+                       rel_value=res.value / g.value,
+                       node_mb=node_bytes(tree.b, k, delta) / 2 ** 20)
+        rows.append(row)
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print("k,randgreedi_feasible,rg_node_mb,L,b,node_mb,rel_calls,rel_value")
+    for r in rows:
+        print(f"{r['k']},{r['randgreedi_feasible']},{r['rg_node_mb']:.1f},"
+              f"{r.get('L')},{r.get('b')},{r.get('node_mb', 0):.1f},"
+              f"{(r['rel_calls'] or 0):.4f},{(r['rel_value'] or 0):.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(ap.parse_args().full)

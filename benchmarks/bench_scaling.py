@@ -1,0 +1,72 @@
+"""Fig. 6 reproduction: strong scaling, communication vs computation.
+
+k-dominating set on the social-like (Friendster-regime) graph, k = 50,
+m ∈ {8, …, 64}: GreedyML with b = 2 (tallest tree, weakest guarantee)
+vs RandGreedi. The paper's claim: RandGreedi's root-gather communication
+grows O(k·m) (linearly) while GreedyML's per-node communication is
+O(k·log m); computation scales similarly for both.
+
+On one CPU we *measure* per-node computation (critical-path marginal-gain
+evaluations × measured ns/eval) and *model* communication time from the
+measured communication volumes with the v5e link bandwidth (bytes at the
+busiest node / 50 GB/s) — volumes are exact, link speed is the model.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import HW, Timer, build, instances
+from repro.core.simulate import run_tree_lazy
+from repro.core.tree import AccumulationTree, randgreedi_tree
+
+
+def run(full: bool = False, k: int = 50):
+    spec = instances(full)["social-like"]
+    sparse, _, universe = build("social-like", spec)
+    delta = sum(len(s) for s in sparse) / len(sparse)
+    elem_bytes = delta * 8
+    rows = []
+    for m in (8, 16, 32, 64):
+        for alg, tree in (("RandGreedi", randgreedi_tree(m)),
+                          ("GreedyML-b2", AccumulationTree(m, 2))):
+            with Timer() as t:
+                res = run_tree_lazy(spec["objective"], sparse, k, tree,
+                                    seed=1, universe=universe)
+            # busiest-node inbound volume: RG root takes m·k elements,
+            # GML parents take b·k per level on the critical path
+            if tree.num_levels == 1:
+                busiest = m * k * elem_bytes
+            else:
+                busiest = tree.num_levels * tree.b * k * elem_bytes
+            rows.append(dict(
+                m=m, alg=alg, L=tree.num_levels,
+                crit_evals=res.evals_critical,
+                comm_elements=res.comm_elements,
+                busiest_node_bytes=busiest,
+                modeled_comm_us=busiest / HW["link"] * 1e6,
+                wall_s=t.seconds, value=res.value))
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full)
+    print("m,alg,L,crit_evals,comm_elements,busiest_node_bytes,"
+          "modeled_comm_us,wall_s,value")
+    for r in rows:
+        print(f"{r['m']},{r['alg']},{r['L']},{r['crit_evals']},"
+              f"{r['comm_elements']},{r['busiest_node_bytes']:.0f},"
+              f"{r['modeled_comm_us']:.1f},{r['wall_s']:.2f},{r['value']:.0f}")
+    # scaling claim: RG busiest-node bytes grow ~linearly in m, GML ~log m
+    rg = [r for r in rows if r["alg"] == "RandGreedi"]
+    gml = [r for r in rows if r["alg"] == "GreedyML-b2"]
+    print(f"# RG busiest-node growth  8→64 machines: "
+          f"{rg[-1]['busiest_node_bytes'] / rg[0]['busiest_node_bytes']:.1f}×")
+    print(f"# GML busiest-node growth 8→64 machines: "
+          f"{gml[-1]['busiest_node_bytes'] / gml[0]['busiest_node_bytes']:.1f}×")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(ap.parse_args().full)

@@ -1,0 +1,82 @@
+"""Fig. 4 reproduction: accumulation-tree parameter selection.
+
+Geometric means over the k-cover/k-dominating datasets of (a) execution
+time and (b) critical-path function calls relative to Greedy, for trees on
+m machines with (L, b) ∈ {(1, m), (2, √m), …, (log₂m, 2)} and varying k.
+"""
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+
+from benchmarks.common import Timer, build, geomean, instances
+from repro.core.simulate import run_greedy_lazy, run_tree_lazy
+from repro.core.tree import AccumulationTree
+
+
+def tree_grid(m: int):
+    out = []
+    b = 2
+    while b <= m:
+        if round(m ** (1 / max(1, round(__import__("math").log(m, b))))) >= 2:
+            out.append(AccumulationTree(m, b))
+        b *= 2
+    # dedupe by levels
+    seen, uniq = set(), []
+    for t in out:
+        if t.num_levels not in seen:
+            seen.add(t.num_levels)
+            uniq.append(t)
+    return uniq
+
+
+def run(full: bool = False, m: int = 32, ks=(64, 256, 1024)):
+    rows = []
+    insts = {k: v for k, v in instances(full).items()
+             if v["objective"] in ("kcover", "kdom")}
+    per_tree_time = defaultdict(list)
+    per_tree_calls = defaultdict(list)
+    for name, spec in insts.items():
+        sparse, _, universe = build(name, spec)
+        for k in ks:
+            g = run_greedy_lazy(spec["objective"], sparse, k,
+                                universe=universe)
+            for tree in tree_grid(m):
+                with Timer() as t:
+                    res = run_tree_lazy(spec["objective"], sparse, k, tree,
+                                        seed=1, universe=universe)
+                key = (tree.num_levels, tree.b, k)
+                per_tree_time[key].append(t.seconds)
+                rel_calls = res.evals_critical / max(g.evals_critical, 1)
+                per_tree_calls[key].append(rel_calls)
+                rows.append(dict(dataset=name, k=k, L=tree.num_levels,
+                                 b=tree.b, time_s=t.seconds,
+                                 rel_calls=rel_calls,
+                                 rel_value=res.value / g.value))
+    summary = []
+    for key in sorted(per_tree_time):
+        L, b, k = key
+        summary.append(dict(L=L, b=b, k=k,
+                            geo_time_s=geomean(per_tree_time[key]),
+                            geo_rel_calls=geomean(per_tree_calls[key])))
+    return rows, summary
+
+
+def main(full: bool = False):
+    rows, summary = run(full)
+    print("dataset,k,L,b,time_s,rel_calls,rel_value")
+    for r in rows:
+        print(f"{r['dataset']},{r['k']},{r['L']},{r['b']},"
+              f"{r['time_s']:.3f},{r['rel_calls']:.4f},{r['rel_value']:.4f}")
+    print("\n# geomean over datasets (Fig. 4)")
+    print("L,b,k,geo_time_s,geo_rel_calls")
+    for s in summary:
+        print(f"{s['L']},{s['b']},{s['k']},{s['geo_time_s']:.3f},"
+              f"{s['geo_rel_calls']:.4f}")
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(ap.parse_args().full)

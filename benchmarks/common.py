@@ -1,0 +1,69 @@
+"""Shared instance builders + reporting helpers for the paper benchmarks.
+
+Sizes are scaled from the paper's Table 2 regimes to single-CPU runtimes;
+every benchmark accepts --full for larger instances.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.data import synthetic
+
+HW = {"flops": 197e12, "hbm": 819e9, "link": 50e9}  # TPU v5e (assignment)
+
+
+def instances(full: bool = False) -> Dict[str, Dict]:
+    s = 4 if full else 1
+    return {
+        # k-cover (FIMI-style): retail-like (δ≈10) and webdocs-like (δ≈177)
+        "retail-like": dict(objective="kcover", n=8192 * s, universe=4096 * s,
+                            gen="kcover", avg=10.0),
+        "webdocs-like": dict(objective="kcover", n=2048 * s,
+                             universe=8192 * s, gen="kcover", avg=120.0),
+        # k-dominating-set: road-like (δ≈2.4) and social-like (heavy tail)
+        "road-like": dict(objective="kdom", n=16384 * s, gen="road"),
+        "social-like": dict(objective="kdom", n=4096 * s, gen="social"),
+        # k-medoid: Tiny-ImageNet-like
+        "tinyimg-like": dict(objective="kmedoid", n=2048 * s, d=512,
+                             gen="images"),
+    }
+
+
+def build(name: str, spec: Dict, seed: int = 0):
+    """Returns (sparse_data, dense_payloads, universe)."""
+    if spec["gen"] == "kcover":
+        sets = synthetic.gen_kcover(spec["n"], spec["universe"], seed=seed,
+                                    avg_size=spec["avg"])
+        return sets, synthetic.pack_bitmaps(sets, spec["universe"]), \
+            spec["universe"]
+    if spec["gen"] == "road":
+        sets = synthetic.gen_graph_road(spec["n"], seed=seed)
+        return sets, synthetic.pack_bitmaps(sets, spec["n"]), spec["n"]
+    if spec["gen"] == "social":
+        sets = synthetic.gen_graph_social(spec["n"], seed=seed)
+        return sets, synthetic.pack_bitmaps(sets, spec["n"]), spec["n"]
+    if spec["gen"] == "images":
+        x = synthetic.gen_images(spec["n"], spec["d"], seed=seed)
+        return x, x, 0
+    raise KeyError(spec["gen"])
+
+
+def geomean(xs: List[float]) -> float:
+    xs = [max(x, 1e-12) for x in xs]
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

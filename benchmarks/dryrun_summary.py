@@ -1,0 +1,64 @@
+"""§Dry-run summary: per-cell compile success, bytes/device, collective
+schedule (op counts by type) for both meshes → markdown table."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+
+def main(results_dir: str = "results/dryrun",
+         out_md: str = "results/dryrun_summary.md") -> None:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    by_cell = defaultdict(dict)
+    for r in recs:
+        by_cell[(r["arch"], r["shape"])][r["mesh"]] = r
+
+    lines = [
+        "# Multi-pod dry-run: every (arch × shape) × {16×16, 2×16×16}",
+        "",
+        "| arch | shape | 1-pod mem/dev | 1-pod fits | 2-pod mem/dev | "
+        "2-pod fits | collectives (1-pod HLO) | compile s (1p/2p) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    ok = total = 0
+    for (arch, shape), meshes in sorted(by_cell.items()):
+        cells = []
+        for mk in ("single", "multi"):
+            r = meshes.get(mk)
+            total += 1 if r else 0
+            if r and r.get("ok"):
+                ok += 1
+                gib = r["per_device"]["memory"]["total_bytes"] / 2 ** 30
+                cells.append((f"{gib:.2f} GiB",
+                              "✓" if gib <= 16 else "✗",
+                              r))
+            else:
+                cells.append(("FAIL", "✗", r))
+        coll = ""
+        r1 = meshes.get("single")
+        if r1 and r1.get("ok"):
+            ops = r1["per_device"]["collectives_static"]["ops"]
+            coll = ", ".join(f"{k}×{v['count']}" for k, v in sorted(ops.items()))
+        t1 = meshes.get("single", {}).get("compile_s", "—")
+        t2 = meshes.get("multi", {}).get("compile_s", "—")
+        lines.append(f"| {arch} | {shape} | {cells[0][0]} | {cells[0][1]} | "
+                     f"{cells[1][0]} | {cells[1][1]} | {coll} | {t1}/{t2} |")
+    lines.insert(1, f"\n**{ok}/{total} cell compiles OK.**\n")
+    os.makedirs(os.path.dirname(out_md), exist_ok=True)
+    with open(out_md, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print("\n".join(lines))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--out", default="results/dryrun_summary.md")
+    a = ap.parse_args()
+    main(a.results, a.out)

@@ -1,0 +1,72 @@
+"""Benchmark driver: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV summary lines per benchmark (plus
+each benchmark's own detailed CSV above it). us_per_call = wall time per
+critical-path marginal-gain evaluation for the headline configuration.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__) + "/..")
+
+from benchmarks import (bench_complexity, bench_kmedoid, bench_memory_k,
+                        bench_memory_limits, bench_quality, bench_scaling,
+                        bench_tree_params)
+from benchmarks.common import csv_row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    benches = {
+        "tree_params(fig4)": lambda: bench_tree_params.main(args.full),
+        "memory_k(fig5)": lambda: bench_memory_k.main(args.full),
+        "memory_limits(tab3)": lambda: bench_memory_limits.main(args.full),
+        "scaling(fig6)": lambda: bench_scaling.main(args.full),
+        "kmedoid(tab4)": lambda: bench_kmedoid.main(args.full),
+        "complexity(tab1)": lambda: bench_complexity.main(args.full),
+        "quality(sec6)": lambda: bench_quality.main(args.full),
+    }
+    summary = []
+    for name, fn in benches.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        rows = fn()
+        dt = time.time() - t0
+        derived = f"rows={len(rows)};wall_s={dt:.1f}"
+        # us per critical-path eval for the headline row where available
+        us = 0.0
+        for r in rows:
+            if isinstance(r, dict) and r.get("crit_evals"):
+                us = dt * 1e6 / max(sum(
+                    rr.get("crit_evals", 0) for rr in rows
+                    if isinstance(rr, dict)), 1)
+                break
+        summary.append(csv_row(name, us, derived))
+
+    # roofline summary (if dry-run results exist)
+    if os.path.isdir("results/dryrun") and (not args.only or
+                                            "roofline" in args.only):
+        print("\n===== roofline(dry-run) =====")
+        from benchmarks import roofline
+        rows = roofline.main()
+        summary.append(csv_row("roofline", 0.0, f"cells={len(rows)}"))
+
+    print("\n# ==== summary (name,us_per_call,derived) ====")
+    for line in summary:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: the paper's algorithm in 40 lines.
+
+Builds a max-k-cover instance, runs sequential Greedy, RandGreedi, and
+GreedyML (accumulation tree m=8, b=2 → L=3), and compares quality and
+critical-path work — the paper's Table 3 in miniature.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.simulate import (run_greedy_lazy, run_tree_lazy)
+from repro.core.tree import AccumulationTree, randgreedi_tree
+from repro.data import synthetic
+
+N, UNIVERSE, K, M = 4096, 8192, 64, 8
+
+print(f"max-{K}-cover: n={N} sets over a {UNIVERSE}-item universe\n")
+sets = synthetic.gen_kcover(N, UNIVERSE, seed=0, avg_size=12.0)
+
+greedy = run_greedy_lazy("kcover", sets, K, universe=UNIVERSE)
+print(f"Greedy      f={greedy.value:7.0f}  calls={greedy.evals_total:8d}  "
+      f"(sequential baseline)")
+
+rg = run_tree_lazy("kcover", sets, K, randgreedi_tree(M), seed=1,
+                   universe=UNIVERSE)
+print(f"RandGreedi  f={rg.value:7.0f}  crit-path calls={rg.evals_critical:8d}"
+      f"  (m={M}, single accumulation)")
+
+ml = run_tree_lazy("kcover", sets, K, AccumulationTree(M, 2), seed=1,
+                   universe=UNIVERSE)
+print(f"GreedyML    f={ml.value:7.0f}  crit-path calls={ml.evals_critical:8d}"
+      f"  (m={M}, b=2, L={ml.levels})")
+
+print(f"\nquality: GreedyML/Greedy = {ml.value / greedy.value:.4f}, "
+      f"GreedyML/RandGreedi = {ml.value / rg.value:.4f}")
+print(f"max elements on one accumulation node: "
+      f"RandGreedi={M * K}, GreedyML={2 * K}  "
+      f"(the paper's memory-bottleneck fix)")

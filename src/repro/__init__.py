@@ -1,0 +1,16 @@
+"""repro: GreedyML distributed submodular maximization inside a multi-pod JAX LM framework.
+
+Layout:
+  repro.core      — the paper's contribution: GreedyML / RandGreedi / Greedy
+  repro.kernels   — Pallas TPU kernels for the marginal-gain hot spot
+  repro.models    — LM model zoo (dense / MoE / SSM / hybrid / enc-dec / VLM)
+  repro.sharding  — logical-axis sharding rules for the (pod, data, model) mesh
+  repro.optim     — AdamW & friends, schedules, gradient compression
+  repro.data      — synthetic corpora + GreedyML-backed coreset selection
+  repro.checkpoint— sharded fault-tolerant checkpointing (+ elastic reshard)
+  repro.runtime   — failure injection, straggler mitigation, elasticity
+  repro.configs   — assigned architecture configs + paper problem configs
+  repro.launch    — mesh, dry-run, train, serve, summarize drivers
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,26 @@
+"""Elastic re-sharding: restore a checkpoint written under mesh A onto a
+different mesh B (grow/shrink the data axis, change model parallelism).
+
+Checkpoints store full (unsharded) arrays, so resharding is just resolving
+fresh PartitionSpecs against the NEW mesh and device_put-ing — the logical
+axis names carried by the model make the mapping mesh-independent. This is
+what runtime/elastic.py uses when the scheduler changes the device pool.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.checkpoint import manager
+from repro.sharding.axes import AxisRules, DEFAULT_PARAM_RULES, tree_shardings
+
+
+def restore_resharded(ckpt_dir: str, example_tree, axes_tree, mesh: Mesh,
+                      step: Optional[int] = None,
+                      rules: AxisRules = DEFAULT_PARAM_RULES):
+    """Restore onto `mesh` using logical `axes_tree` (from init_params)."""
+    shardings = tree_shardings(axes_tree, example_tree, mesh, rules)
+    return manager.restore(ckpt_dir, example_tree, step=step,
+                           shardings=shardings)

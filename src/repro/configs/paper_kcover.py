@@ -1,0 +1,16 @@
+"""Paper experiment config: maximum k-set-cover (webdocs/kosarak/retail regime).
+
+Synthetic stand-in shaped like the FIMI benchmarks: power-law itemset sizes
+(avg δ ≈ 8–177 in the paper's Table 2), scaled to laptop size.
+"""
+from repro.configs.base import SubmodularConfig
+
+CONFIG = SubmodularConfig(
+    objective="kcover",
+    k=64,
+    n=65_536,
+    universe=16_384,
+    num_machines=8,
+    branching=2,
+    seed=7,
+)

@@ -1,0 +1,16 @@
+"""Paper experiment config: k-vertex-dominating set (road/Friendster regime).
+
+Synthetic road-like graph (low avg degree ≈ 2.4, like road_usa/road_central)
+plus a heavy-tail social-like variant in the benchmarks.
+"""
+from repro.configs.base import SubmodularConfig
+
+CONFIG = SubmodularConfig(
+    objective="kdom",
+    k=128,
+    n=65_536,
+    universe=65_536,             # ground set == universe (vertices)
+    num_machines=8,
+    branching=2,
+    seed=11,
+)

@@ -1,0 +1,18 @@
+"""Paper experiment config: k-medoid exemplar clustering (Tiny-ImageNet regime).
+
+Synthetic mixture-of-Gaussians 'images' (flattened, mean-subtracted,
+normalized — exactly the paper's preprocessing), k=200 exemplars, local
+objective evaluation per §6.4 with optional random augmentation.
+"""
+from repro.configs.base import SubmodularConfig
+
+CONFIG = SubmodularConfig(
+    objective="kmedoid",
+    k=200,
+    n=8_192,
+    feature_dim=768,
+    num_machines=32,
+    branching=2,
+    seed=13,
+    augment=0,
+)

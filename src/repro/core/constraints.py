@@ -1,0 +1,54 @@
+"""Hereditary constraints beyond cardinality (paper §7 future work).
+
+The Greedy/GreedyML machinery supports any hereditary family through a
+fixed-shape feasibility interface: a constraint keeps a small state,
+masks infeasible candidates each step, and updates on selection. The
+α/(L+1) analysis (Theorem 4.4) only needs heredity, so GreedyML composes
+with these unchanged.
+
+``PartitionMatroid`` — ground set partitioned into C categories with
+per-category capacities (e.g. "at most c_j documents per language/source
+in the coreset"); Greedy is 1/2-approximate under matroid constraints.
+Cardinality is the 1-category special case (handled natively by k).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PartitionMatroid:
+    """categories: (n,) int32 per-element category; capacities: (C,)."""
+
+    categories: jax.Array
+    capacities: jax.Array
+
+    def tree_flatten(self):
+        return (self.categories, self.capacities), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def init_state(self) -> jax.Array:
+        return jnp.zeros(self.capacities.shape, jnp.int32)
+
+    def feasible_mask(self, counts: jax.Array) -> jax.Array:
+        """(n,) bool: adding element i keeps its category under capacity."""
+        open_cat = counts < self.capacities
+        return jnp.take(open_cat, self.categories)
+
+    def update(self, counts: jax.Array, element_index) -> jax.Array:
+        cat = jnp.take(self.categories, element_index)
+        return counts.at[cat].add(1)
+
+
+def uniform_matroid(n: int, k: int) -> PartitionMatroid:
+    """Cardinality-k as a 1-category partition matroid (for tests)."""
+    return PartitionMatroid(jnp.zeros((n,), jnp.int32),
+                            jnp.asarray([k], jnp.int32))

@@ -1,0 +1,183 @@
+"""Submodular objectives with a fixed-shape, JAX-native interface.
+
+Every objective operates on fixed-width element *payloads* so solutions can
+move through collectives with static shapes:
+
+  * k-cover / k-dominating-set — packed uint32 universe bitmaps (C, W)
+    (the TPU-dense representation; the CPU lazy simulator uses the paper's
+    sparse adjacency lists — DESIGN §4)
+  * k-medoid / facility-location — feature vectors (C, D)
+
+Interface (all methods jit-safe, fixed shapes):
+  init_state(ground, ground_valid) → state     state of an EMPTY solution
+  gains(state, cands, cand_valid)  → (C,) marginal gains (−inf if invalid)
+  update(state, payload)           → state after adding one element
+  value(state)                     → f(S) under this node's evaluation set
+
+For k-medoid/facility the evaluation ground set is the node's local data
+(paper §6.4 'local objective'); internal tree nodes therefore rebuild state
+over the union of child solutions (optionally + augment images).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+F32 = jnp.float32
+INF = jnp.inf
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CoverageState:
+    covered: jax.Array          # (W,) uint32 packed bitmap
+    total: jax.Array            # () f32 current covered count
+
+    def tree_flatten(self):
+        return (self.covered, self.total), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class Coverage:
+    """max-k-cover / k-dominating-set: f(S) = |∪_{e∈S} cover(e)|."""
+
+    name = "coverage"
+
+    def __init__(self, universe_words: int, backend: str = None):
+        self.words = universe_words
+        self.backend = backend
+
+    def init_state(self, ground, ground_valid) -> CoverageState:
+        del ground, ground_valid
+        return CoverageState(jnp.zeros((self.words,), jnp.uint32),
+                             jnp.zeros((), F32))
+
+    def gains(self, state: CoverageState, cands, cand_valid):
+        return ops.coverage_gains(cands, state.covered, cand_valid,
+                                  backend=self.backend)
+
+    def update(self, state: CoverageState, payload) -> CoverageState:
+        new = jnp.bitwise_or(state.covered, payload)
+        added = jnp.sum(jax.lax.population_count(
+            jnp.bitwise_and(payload, jnp.bitwise_not(state.covered))
+        ).astype(jnp.int32)).astype(F32)
+        return CoverageState(new, state.total + added)
+
+    def value(self, state: CoverageState):
+        return state.total
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MedoidState:
+    ground: jax.Array           # (N, D) evaluation set
+    mind: jax.Array             # (N,) min distance to solution (d(·,e0) at ∅)
+    base: jax.Array             # () f32 L({e0}) term
+    n_eff: jax.Array            # () f32 number of valid ground elements
+
+    def tree_flatten(self):
+        return (self.ground, self.mind, self.base, self.n_eff), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class KMedoid:
+    """Exemplar clustering: f(S) = L({e0}) − L(S ∪ {e0}), L = mean min dist.
+
+    e0 is the all-zeros auxiliary element (paper §6.4), so d(u, e0) = ‖u‖
+    and the empty-solution mind is exactly ‖u‖.
+    """
+
+    name = "kmedoid"
+
+    def __init__(self, backend: str = None):
+        self.backend = backend
+
+    def init_state(self, ground, ground_valid) -> MedoidState:
+        d0 = jnp.linalg.norm(ground.astype(F32), axis=-1)
+        # invalid ground rows: mind = 0 ⇒ contribute nothing to any gain
+        mind = jnp.where(ground_valid, d0, 0.0)
+        n_eff = jnp.maximum(jnp.sum(ground_valid.astype(F32)), 1.0)
+        base = jnp.sum(mind) / n_eff
+        return MedoidState(ground, mind, base, n_eff)
+
+    def gains(self, state: MedoidState, cands, cand_valid):
+        g = ops.kmedoid_gains(state.ground, state.mind, cands, cand_valid,
+                              backend=self.backend)
+        # kernels divide by ground rows; rescale to valid count
+        return jnp.where(jnp.isfinite(g),
+                         g * (state.ground.shape[0] / state.n_eff), g)
+
+    def update(self, state: MedoidState, payload) -> MedoidState:
+        from repro.kernels import ref
+        mind = ref.kmedoid_update(state.ground, state.mind, payload)
+        return dataclasses.replace(state, mind=mind)
+
+    def value(self, state: MedoidState):
+        return state.base - jnp.sum(state.mind) / state.n_eff
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FacilityState:
+    ground: jax.Array           # (N, D)
+    curmax: jax.Array           # (N,) max similarity to solution (0 at ∅)
+    n_eff: jax.Array
+
+    def tree_flatten(self):
+        return (self.ground, self.curmax, self.n_eff), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class FacilityLocation:
+    """f(S) = mean_u max(0, max_{v∈S} ⟨u, v⟩) — embedding coreset selection."""
+
+    name = "facility"
+
+    def __init__(self, backend: str = None):
+        self.backend = backend
+
+    def init_state(self, ground, ground_valid) -> FacilityState:
+        big = jnp.float32(3.0e38)
+        curmax = jnp.where(ground_valid, 0.0, big)   # invalid rows: no gain
+        n_eff = jnp.maximum(jnp.sum(ground_valid.astype(F32)), 1.0)
+        return FacilityState(ground, curmax, n_eff)
+
+    def gains(self, state: FacilityState, cands, cand_valid):
+        g = ops.facility_gains(state.ground, state.curmax, cands, cand_valid,
+                               backend=self.backend)
+        return jnp.where(jnp.isfinite(g),
+                         g * (state.ground.shape[0] / state.n_eff), g)
+
+    def update(self, state: FacilityState, payload) -> FacilityState:
+        from repro.kernels import ref
+        curmax = ref.facility_update(state.ground, state.curmax, payload)
+        return dataclasses.replace(state, curmax=curmax)
+
+    def value(self, state: FacilityState):
+        valid = state.curmax < 1.0e38
+        return jnp.sum(jnp.where(valid, state.curmax, 0.0)) / state.n_eff
+
+
+def make_objective(name: str, *, universe: int = 0, backend: str = None):
+    if name in ("kcover", "kdom", "coverage"):
+        assert universe > 0, "coverage objectives need a universe size"
+        return Coverage((universe + 31) // 32, backend=backend)
+    if name == "kmedoid":
+        return KMedoid(backend=backend)
+    if name in ("facility", "facility_location"):
+        return FacilityLocation(backend=backend)
+    raise KeyError(name)

@@ -1,0 +1,181 @@
+"""Distributed GreedyML via shard_map — the paper's Algorithm 3.1 mapped
+TPU-natively onto mesh collectives (DESIGN §4).
+
+The m machines are the devices of an L-dimensional mesh factorization
+(b_1, …, b_L), innermost level first; machine id digits follow the paper's
+``parent(id, ℓ) = b^ℓ·⌊id/b^ℓ⌋`` arithmetic. Then
+
+    level-ℓ accumulation  ≡  lax.all_gather(S_prev, axis=tree_axes[ℓ-1])
+                             + a redundant local Greedy on the b·k union
+                             in every member of the group.
+
+After the level-ℓ gather+greedy all b^ℓ devices of a subtree hold identical
+solutions, so the next gather collects exactly one representative per child
+subtree — the recurrence of Fig. 3. ``argmax{f(S), f(S_prev)}`` (line 15)
+uses ``replay_value`` to score S_prev under the node-local evaluation set.
+RandGreedi is the single-axis special case; the sequential Greedy baseline
+is `core.greedy.greedy` on an unsharded array.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.greedy import Solution, greedy, replay_value, select_better
+
+F32 = jnp.float32
+
+
+def _machine_flat_id(tree_axes: Sequence[str], radices: Sequence[int]):
+    """Mixed-radix machine id of this lane (level-0 digit = innermost)."""
+    mid = jnp.zeros((), jnp.int32)
+    mult = 1
+    for ax, r in zip(tree_axes, radices):
+        mid = mid + lax.axis_index(ax).astype(jnp.int32) * mult
+        mult *= r
+    return mid
+
+
+def _broadcast_from_root(sol: Solution, tree_axes: Sequence[str],
+                         radices: Sequence[int]) -> Solution:
+    """Replicate machine-0's solution to every lane (paper returns S_0)."""
+    mid = _machine_flat_id(tree_axes, radices)
+    mask = (mid == 0)
+
+    def pick(x):
+        zero = jnp.zeros_like(x)
+        sel = jnp.where(jnp.reshape(mask, (1,) * x.ndim), x, zero)
+        out = sel
+        for ax in tree_axes:
+            out = lax.psum(out, ax)
+        return out.astype(x.dtype)
+
+    return Solution(pick(sol.ids),
+                    jax.tree.map(pick, sol.payloads),
+                    pick(sol.valid.astype(jnp.int32)) > 0,
+                    pick(sol.value), pick(sol.evals))
+
+
+def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
+                      radices: Sequence[int],
+                      augment: Optional[jax.Array] = None,
+                      sample_leaf: int = 0, sample_level: int = 0):
+    """Returns the per-lane SPMD function (for use inside shard_map).
+
+    ``sample_leaf`` / ``sample_level``: stochastic-greedy sampling at the
+    leaves / accumulation nodes (Mirzasoleiman et al. 2015)."""
+
+    def fn(ids, payloads, valid, *aug):
+        # ---- leaves: Greedy on the local random partition ------------------
+        leaf_key = None
+        if sample_leaf:
+            leaf_key = jax.random.fold_in(
+                jax.random.PRNGKey(17),
+                _machine_flat_id(tree_axes, radices))
+        s_prev = greedy(objective, ids, payloads, valid, k,
+                        sample=sample_leaf, key=leaf_key)
+
+        # ---- accumulation levels ------------------------------------------
+        for lvl, ax in enumerate(tree_axes):
+            u_ids = lax.all_gather(s_prev.ids, ax, axis=0, tiled=True)
+            u_pay = lax.all_gather(s_prev.payloads, ax, axis=0, tiled=True)
+            u_val = lax.all_gather(s_prev.valid, ax, axis=0, tiled=True)
+            ground, ground_valid = u_pay, u_val
+            if aug:
+                ground = jnp.concatenate([u_pay, aug[0][lvl]], axis=0)
+                ground_valid = jnp.concatenate(
+                    [u_val, jnp.ones(aug[0][lvl].shape[0], bool)], axis=0)
+            lvl_key = None
+            if sample_level:
+                lvl_key = jax.random.fold_in(
+                    jax.random.PRNGKey(23 + lvl),
+                    _machine_flat_id(tree_axes, radices))
+            s_new = greedy(objective, u_ids, u_pay, u_val, k,
+                           ground=ground, ground_valid=ground_valid,
+                           sample=sample_level, key=lvl_key)
+            prev_score = replay_value(objective, s_prev.payloads,
+                                      s_prev.valid, ground, ground_valid)
+            s_prev = select_better(
+                s_new, Solution(s_prev.ids, s_prev.payloads, s_prev.valid,
+                                prev_score, s_prev.evals))
+
+        return _broadcast_from_root(s_prev, tree_axes, radices)
+
+    return fn
+
+
+def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
+                         valid: jax.Array, k: int, mesh: Mesh,
+                         tree_axes: Sequence[str],
+                         augment: Optional[jax.Array] = None,
+                         sample_leaf: int = 0, sample_level: int = 0,
+                         ) -> Solution:
+    """Run distributed GreedyML over `mesh`.
+
+    ids/payloads/valid: leading dim n sharded over `tree_axes` (outermost
+    mesh axis first in the PartitionSpec so lane i gets block i). `augment`:
+    optional (L, A, …) per-level extra evaluation elements (k-medoid §6.4),
+    replicated.
+    """
+    radices = [mesh.shape[a] for a in tree_axes]
+    data_spec = P(tuple(reversed(tree_axes)))
+    in_specs = [data_spec, data_spec, data_spec]
+    args = [ids, payloads, valid]
+    if augment is not None:
+        in_specs.append(P())
+        args.append(augment)
+    fn = greedyml_shmap_fn(objective, k, tree_axes, radices,
+                           sample_leaf=sample_leaf,
+                           sample_level=sample_level)
+    out = shard_map(fn, mesh=mesh,
+                    in_specs=tuple(in_specs),
+                    out_specs=Solution(P(), P(), P(), P(), P()),
+                    check_rep=False)(*args)
+    return out
+
+
+def randgreedi_distributed(objective, ids, payloads, valid, k, mesh,
+                           machine_axes: Sequence[str],
+                           augment=None) -> Solution:
+    """RandGreedi = GreedyML with a single accumulation level: all machine
+    axes form ONE level (gather everything to every lane, one global
+    Greedy). Implemented by flattening the axes tuple into one level."""
+    radices = [math.prod(mesh.shape[a] for a in machine_axes)]
+
+    def fn(ids_, payloads_, valid_, *aug):
+        s_leaf = greedy(objective, ids_, payloads_, valid_, k)
+        u_ids, u_pay, u_val = s_leaf.ids, s_leaf.payloads, s_leaf.valid
+        for ax in machine_axes:
+            u_ids = lax.all_gather(u_ids, ax, axis=0, tiled=True)
+            u_pay = lax.all_gather(u_pay, ax, axis=0, tiled=True)
+            u_val = lax.all_gather(u_val, ax, axis=0, tiled=True)
+        ground, ground_valid = u_pay, u_val
+        if aug:
+            ground = jnp.concatenate([u_pay, aug[0][0]], axis=0)
+            ground_valid = jnp.concatenate(
+                [u_val, jnp.ones(aug[0][0].shape[0], bool)], axis=0)
+        s_new = greedy(objective, u_ids, u_pay, u_val, k,
+                       ground=ground, ground_valid=ground_valid)
+        prev_score = replay_value(objective, s_leaf.payloads, s_leaf.valid,
+                                  ground, ground_valid)
+        s_prev = select_better(
+            s_new, Solution(s_leaf.ids, s_leaf.payloads, s_leaf.valid,
+                            prev_score, s_leaf.evals))
+        return _broadcast_from_root(s_prev, machine_axes,
+                                    [mesh.shape[a] for a in machine_axes])
+
+    data_spec = P(tuple(reversed(machine_axes)))
+    in_specs = [data_spec, data_spec, data_spec]
+    args = [ids, payloads, valid]
+    if augment is not None:
+        in_specs.append(P())
+        args.append(augment)
+    return shard_map(fn, mesh=mesh, in_specs=tuple(in_specs),
+                     out_specs=Solution(P(), P(), P(), P(), P()),
+                     check_rep=False)(*args)

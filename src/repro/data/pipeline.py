@@ -1,0 +1,59 @@
+"""Sharded batch pipeline over a (synthetic or memory-mapped) token corpus.
+
+Deterministic: batch order is a seeded permutation of document indices, and
+resume-from-step just fast-forwards the index math — no iterator state in
+checkpoints. ``place()`` device_puts a host batch with the train step's
+input shardings (batch → ('pod','data')).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.axes import DEFAULT_ACT_RULES, resolve_spec
+
+
+@dataclasses.dataclass
+class TokenDataset:
+    tokens: np.ndarray            # (n_docs, seq+1) int32
+    seed: int = 0
+    selected: Optional[np.ndarray] = None   # coreset ids (data selection)
+
+    @property
+    def n(self) -> int:
+        return len(self.selected) if self.selected is not None \
+            else self.tokens.shape[0]
+
+    def doc(self, i: int) -> np.ndarray:
+        j = self.selected[i] if self.selected is not None else i
+        return self.tokens[j]
+
+    def batch(self, step: int, global_batch: int) -> Dict[str, np.ndarray]:
+        """Deterministic batch for `step` (resume = recompute, no state)."""
+        rng = np.random.default_rng(self.seed + step // max(1, self.n //
+                                                            global_batch))
+        perm = rng.permutation(self.n)
+        start = (step * global_batch) % max(self.n - global_batch + 1, 1)
+        idx = perm[start:start + global_batch]
+        if len(idx) < global_batch:
+            idx = np.concatenate([idx, perm[:global_batch - len(idx)]])
+        docs = np.stack([self.doc(i) for i in idx])
+        return {"tokens": docs[:, :-1].astype(np.int32),
+                "labels": docs[:, 1:].astype(np.int32)}
+
+
+def place(batch: Dict[str, np.ndarray], mesh: Optional[Mesh]
+          ) -> Dict[str, jax.Array]:
+    if mesh is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    out = {}
+    for k, v in batch.items():
+        axes = ("act_batch",) + (None,) * (v.ndim - 1)
+        spec = resolve_spec(axes, v.shape, mesh, DEFAULT_ACT_RULES)
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out

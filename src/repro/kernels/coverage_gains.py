@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: k-cover / k-dominating-set marginal gains.
+
+gain(c) = popcount(cand_bits[c] & ~covered) over packed uint32 universe
+bitmaps. TPUs have no scalar popcount loop — the whole tile is computed as
+vector ops (AND/ANDN + lax.population_count) over (TC candidates × TW
+words), with partial sums accumulated over the W grid dimension.
+
+This is the dense-bitmap representation chosen for the TPU (DESIGN §4);
+the CPU lazy-greedy simulator uses the paper's sparse adjacency lists.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+U32 = jnp.uint32
+
+TILE_C = 128
+TILE_W = 512
+
+
+def _kernel(bits_ref, covered_ref, out_ref):
+    wi = pl.program_id(1)
+
+    @pl.when(wi == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bits = bits_ref[...]                               # (TC, TW) uint32
+    cov = covered_ref[...]                             # (1, TW) uint32
+    new = jnp.bitwise_and(bits, jnp.bitwise_not(cov))
+    pc = jax.lax.population_count(new).astype(F32)
+    out_ref[...] += jnp.sum(pc, axis=1, keepdims=True).T   # (1, TC)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coverage_gains_pallas(cand_bits: jax.Array, covered: jax.Array,
+                          interpret: bool = False) -> jax.Array:
+    """cand_bits: (C, W) uint32, covered: (W,) uint32 → gains (C,) fp32.
+
+    C, W must be padded to tile multiples (zero bits ⇒ zero gain).
+    """
+    c, w = cand_bits.shape
+    assert c % TILE_C == 0 and w % TILE_W == 0, (c, w)
+    grid = (c // TILE_C, w // TILE_W)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_C, TILE_W), lambda ci, wi: (ci, wi)),
+            pl.BlockSpec((1, TILE_W), lambda ci, wi: (0, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_C), lambda ci, wi: (0, ci)),
+        out_shape=jax.ShapeDtypeStruct((1, c), F32),
+        interpret=interpret,
+    )(cand_bits, covered.reshape(1, w))
+    return out[0]

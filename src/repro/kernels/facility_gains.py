@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: facility-location marginal gains.
+
+gain(c) = Σ_x max(0, ⟨x, c⟩ − curmax_x) / N — the embedding-space objective
+used by the data pipeline's GreedyML coreset selection (DESIGN §2). Same
+tiling scheme as kmedoid_gains: the similarity block is one MXU matmul,
+partial sums accumulate over the N grid dimension in fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+TILE_N = 256
+TILE_C = 128
+
+
+def _kernel(ground_ref, curmax_ref, cands_ref, out_ref, *, n_total: int):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = ground_ref[...].astype(F32)                    # (TN, D)
+    c = cands_ref[...].astype(F32)                     # (TC, D)
+    m = curmax_ref[...].astype(F32)                    # (1, TN)
+
+    sim = jax.lax.dot_general(g, c, (((1,), (1,)), ((), ())),
+                              preferred_element_type=F32)     # (TN, TC)
+    inc = jnp.maximum(sim - m.T, 0.0)
+    out_ref[...] += jnp.sum(inc, axis=0, keepdims=True) / n_total
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "n_total"))
+def facility_gains_pallas(ground: jax.Array, curmax: jax.Array,
+                          cands: jax.Array, interpret: bool = False,
+                          n_total: int = 0
+                          ) -> jax.Array:
+    """ground: (N, D), curmax: (N,), cands: (C, D) → gains (C,) fp32.
+
+    Padded ground rows must carry curmax = +inf (⇒ zero contribution);
+    the ops.py wrapper guarantees this.
+    """
+    n, d = ground.shape
+    c = cands.shape[0]
+    n_total = n_total or n
+    assert n % TILE_N == 0 and c % TILE_C == 0 and d % 128 == 0, (n, c, d)
+    grid = (c // TILE_C, n // TILE_N)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_total=n_total),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, d), lambda ci, ni: (ni, 0)),
+            pl.BlockSpec((1, TILE_N), lambda ci, ni: (0, ni)),
+            pl.BlockSpec((TILE_C, d), lambda ci, ni: (ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_C), lambda ci, ni: (0, ci)),
+        out_shape=jax.ShapeDtypeStruct((1, c), F32),
+        interpret=interpret,
+    )(ground, curmax.reshape(1, n), cands)
+    return out[0]

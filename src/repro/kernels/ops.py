@@ -1,0 +1,84 @@
+"""jit'd wrappers around the Pallas kernels.
+
+Dispatch policy (``backend`` arg or REPRO_KERNEL_BACKEND env):
+  * 'auto'      — compiled Pallas on TPU, jnp reference elsewhere (CPU has no
+                  Mosaic backend; interpret mode is for correctness tests)
+  * 'pallas'    — compiled Pallas (TPU)
+  * 'interpret' — Pallas interpret mode (CPU correctness validation)
+  * 'ref'       — pure-jnp oracle
+
+Wrappers own all padding to tile multiples and validity masking so callers
+(core/functions.py) see the clean mathematical signature.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.coverage_gains import (TILE_C as COV_TC, TILE_W,
+                                          coverage_gains_pallas)
+from repro.kernels.facility_gains import facility_gains_pallas
+from repro.kernels.kmedoid_gains import (TILE_C, TILE_N,
+                                         kmedoid_gains_pallas)
+
+F32 = jnp.float32
+
+_BIG = 3.0e38  # padding curmax sentinel (≈ f32 max; keeps inc at exactly 0)
+
+
+def _backend(override: Optional[str]) -> str:
+    b = override or os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return b
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def kmedoid_gains(ground, mind, cands, cand_valid, backend=None):
+    b = _backend(backend)
+    if b == "ref":
+        return ref.kmedoid_gains(ground, mind, cands, cand_valid)
+    n, c = ground.shape[0], cands.shape[0]
+    g = _pad_to(_pad_to(ground, 0, TILE_N), 1, 128)
+    m = _pad_to(mind.astype(F32), 0, TILE_N)           # pad mind=0 ⇒ 0 gain
+    cd = _pad_to(_pad_to(cands, 0, TILE_C), 1, 128)
+    gains = kmedoid_gains_pallas(g, m, cd, interpret=(b == "interpret"),
+                                 n_total=n)[:c]
+    return jnp.where(cand_valid, gains, -jnp.inf)
+
+
+def facility_gains(ground, curmax, cands, cand_valid, backend=None):
+    b = _backend(backend)
+    if b == "ref":
+        return ref.facility_gains(ground, curmax, cands, cand_valid)
+    n, c = ground.shape[0], cands.shape[0]
+    g = _pad_to(_pad_to(ground, 0, TILE_N), 1, 128)
+    m = _pad_to(curmax.astype(F32), 0, TILE_N, value=_BIG)
+    cd = _pad_to(_pad_to(cands, 0, TILE_C), 1, 128)
+    gains = facility_gains_pallas(g, m, cd, interpret=(b == "interpret"),
+                                  n_total=n)[:c]
+    return jnp.where(cand_valid, gains, -jnp.inf)
+
+
+def coverage_gains(cand_bits, covered, cand_valid, backend=None):
+    b = _backend(backend)
+    if b == "ref":
+        return ref.coverage_gains(cand_bits, covered, cand_valid)
+    c = cand_bits.shape[0]
+    bits = _pad_to(_pad_to(cand_bits, 0, COV_TC), 1, TILE_W)
+    cov = _pad_to(covered, 0, TILE_W)
+    gains = coverage_gains_pallas(bits, cov,
+                                  interpret=(b == "interpret"))[:c]
+    return jnp.where(cand_valid, gains, -jnp.inf)

@@ -1,0 +1,58 @@
+"""Mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state. The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real (single-CPU) device.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over however many (CPU) devices exist — used by tests."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_machine_mesh(m: int, b: int, axis_prefix: str = "lvl") -> Mesh:
+    """Mesh for the GreedyML accumulation tree: m = b^L machines factored as
+    an L-dim mesh (b, …, b); level-ℓ accumulation all-gathers over axis
+    f"{axis_prefix}{ℓ}". Axis 0 is the innermost digit of the machine id,
+    matching the paper's parent(id, i) = b^i · floor(id / b^i)."""
+    if m <= 0 or b <= 1:
+        raise ValueError(f"need m>0, b>1; got m={m} b={b}")
+    L = int(round(math.log(m, b)))
+    if b ** L != m:
+        raise ValueError(f"shard_map tree driver needs m=b^L; got m={m} b={b} "
+                         f"(use core.simulate for ragged trees)")
+    shape = (b,) * L
+    axes = tuple(f"{axis_prefix}{i}" for i in range(L))
+    # NOTE: jax meshes are row-major (last axis fastest-varying); the paper's
+    # machine id has level-0 groups in the LOW digits, so reverse the axes.
+    return jax.make_mesh(shape, tuple(reversed(axes)))
+
+
+def mesh_devices(mesh: Mesh) -> int:
+    return math.prod(mesh.shape.values())
+
+
+def factor_tree_axes(mesh: Mesh, leaf_axes: Tuple[str, ...]) -> Tuple[str, ...]:
+    """Order existing mesh axes into accumulation-tree levels (innermost
+    level first). Used to run GreedyML directly on the production mesh:
+    512 devices = (model=16, data=16, pod=2) → mixed-radix tree, L=3."""
+    return tuple(reversed([a for a in leaf_axes if a in mesh.shape]))

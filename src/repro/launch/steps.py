@@ -1,0 +1,205 @@
+"""Step builders: train / prefill / decode, with shardings resolved from
+logical axes — the single source the real driver, the tests, and the
+multi-pod dry-run all build from.
+
+train_step = grad-accumulation scan over microbatches (remat inside the
+model's layer scan) → gradient codec (optim.compress) → AdamW. State, batch
+and cache shardings come from the logical-axis rules (sharding/axes.py), so
+the same builder serves a 1-CPU test mesh and the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, OptimConfig, ShapeConfig, TrainConfig
+from repro.models import api, transformer as T
+from repro import optim
+from repro.optim import compress, schedule
+from repro.sharding.axes import (DEFAULT_ACT_RULES, DEFAULT_PARAM_RULES,
+                                 constrain, tree_pspecs, tree_shardings)
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Abstract state construction (no allocation — dry-run friendly)
+# ---------------------------------------------------------------------------
+
+
+def abstract_state(cfg: ModelConfig, ocfg: OptimConfig):
+    """(state SDS pytree, logical-axes pytree)."""
+    params, axes = T.init_params(None, cfg, abstract=True)
+    opt = jax.eval_shape(lambda p: optim.init_opt_state(p, ocfg), params)
+    opt_axes = optim.opt_state_axes(axes, ocfg)
+    return ({"params": params, "opt": opt},
+            {"params": axes, "opt": opt_axes})
+
+
+def concrete_state(key, cfg: ModelConfig, ocfg: OptimConfig):
+    params, axes = T.init_params(key, cfg, abstract=False)
+    opt = optim.init_opt_state(params, ocfg)
+    return ({"params": params, "opt": opt},
+            {"params": axes, "opt": optim.opt_state_axes(axes, ocfg)})
+
+
+def state_shardings(state_axes, state_sds, mesh: Mesh):
+    return tree_shardings(state_axes, state_sds, mesh)  # current profile
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    from repro.sharding.axes import current_act_rules
+    specs, axes = api.input_specs(cfg, shape)
+    out = {}
+    for group in specs:
+        out[group] = tree_shardings(axes[group], specs[group], mesh,
+                                    current_act_rules())
+    return specs, out
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def num_microbatches(shape: ShapeConfig, mesh: Optional[Mesh],
+                     tcfg: TrainConfig) -> int:
+    """Profile-aware: dp = however many ways act_batch actually shards the
+    global batch under the current rules (dp_only folds the model axis in)."""
+    if mesh is None:
+        return 1
+    from repro.sharding.axes import current_act_rules, resolve_spec
+    spec = resolve_spec(("act_batch",), (shape.global_batch,), mesh,
+                        current_act_rules())
+    dp = 1
+    axes_used = spec[0] if len(spec) else None
+    if axes_used is not None:
+        for a in ((axes_used,) if isinstance(axes_used, str) else axes_used):
+            dp *= mesh.shape[a]
+    per_micro = dp * tcfg.microbatch_per_device
+    return max(1, shape.global_batch // max(per_micro, 1))
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimConfig, tcfg: TrainConfig,
+                    shape: ShapeConfig, mesh: Optional[Mesh]):
+    n_micro = num_microbatches(shape, mesh, tcfg)
+
+    def train_step(state, batch):
+        params = state["params"]
+        bsz = batch["tokens"].shape[0]
+        mb = bsz // n_micro
+
+        def reshape_mb(x):
+            y = x.reshape((n_micro, mb) + x.shape[1:])
+            return constrain(y, mesh, None, "act_batch",
+                             *([None] * (x.ndim - 1)))
+
+        micro = jax.tree.map(reshape_mb, batch)
+
+        def loss_of(p, mbatch):
+            return T.loss_fn(p, mbatch, cfg, mesh, tcfg.remat,
+                             tcfg.label_smoothing)
+
+        grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+        def acc_body(carry, mbatch):
+            g_acc, loss_acc, metr_acc = carry
+            (loss, metrics), grads = grad_fn(params, mbatch)
+            grads = compress.decode(
+                compress.encode(grads, ocfg.compress_grads),
+                ocfg.compress_grads)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                 g_acc, grads)
+            loss_acc = loss_acc + loss
+            metr_acc = {k: metr_acc.get(k, 0.0) + v
+                        for k, v in metrics.items()}
+            return (g_acc, loss_acc, metr_acc), None
+
+        acc_dtype = jnp.bfloat16 if ocfg.compress_grads == "bf16" else F32
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+        metr0 = {"ce": jnp.zeros((), F32)}
+        if cfg.moe is not None:
+            metr0.update({"moe_load_balance": jnp.zeros((), F32),
+                          "moe_router_z": jnp.zeros((), F32),
+                          "moe_drop_fraction": jnp.zeros((), F32)})
+        if n_micro > 1:
+            (g, loss, metr), _ = lax.scan(
+                acc_body, (g0, jnp.zeros((), F32), metr0), micro)
+        else:
+            (g, loss, metr), _ = acc_body(
+                (g0, jnp.zeros((), F32), metr0),
+                jax.tree.map(lambda x: x[0], micro))
+        inv = 1.0 / n_micro
+        loss = loss * inv
+        metr = {k: v * inv for k, v in metr.items()}
+
+        lr = schedule.learning_rate(ocfg, state["opt"]["step"] + 1)
+        # 1/n_micro folded into the per-leaf optimizer cast (no f32 tree)
+        params, opt, stats = optim.apply_updates(params, g, state["opt"],
+                                                 ocfg, lr, grad_scale=inv)
+        metr.update(stats)
+        metr["loss"] = loss
+        return {"params": params, "opt": opt}, metr
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh],
+                      max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        return T.prefill(params, batch, cfg, mesh, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh]):
+    def decode_step(params, cache, batch):
+        return T.decode_step(params, cache, batch["tokens"], cfg, mesh)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Jitted, sharded entry points (used by train/serve drivers and the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def jit_train_step(cfg, ocfg, tcfg, shape, mesh):
+    state_sds, state_axes = abstract_state(cfg, ocfg)
+    st_sh = state_shardings(state_axes, state_sds, mesh)
+    in_specs, in_sh = batch_shardings(cfg, shape, mesh)
+    fn = make_train_step(cfg, ocfg, tcfg, shape, mesh)
+    jitted = jax.jit(fn,
+                     in_shardings=(st_sh, in_sh["batch"]),
+                     out_shardings=(st_sh, None),
+                     donate_argnums=(0,))
+    return jitted, state_sds, in_specs["batch"], st_sh, in_sh["batch"]
+
+
+def jit_decode_step(cfg, ocfg, shape, mesh):
+    params_sds, axes = T.init_params(None, cfg, abstract=True)
+    p_sh = tree_shardings(axes, params_sds, mesh)
+    in_specs, in_sh = batch_shardings(cfg, shape, mesh)
+    fn = make_decode_step(cfg, mesh)
+    jitted = jax.jit(fn,
+                     in_shardings=(p_sh, in_sh["cache"], in_sh["batch"]),
+                     out_shardings=(None, in_sh["cache"]),
+                     donate_argnums=(1,))
+    return jitted, params_sds, in_specs, p_sh, in_sh
+
+
+def jit_prefill_step(cfg, ocfg, shape, mesh):
+    params_sds, axes = T.init_params(None, cfg, abstract=True)
+    p_sh = tree_shardings(axes, params_sds, mesh)
+    in_specs, in_sh = batch_shardings(cfg, shape, mesh)
+    fn = make_prefill_step(cfg, mesh)
+    jitted = jax.jit(fn, in_shardings=(p_sh, in_sh["batch"]))
+    return jitted, params_sds, in_specs, p_sh, in_sh

@@ -1,0 +1,84 @@
+"""Model-zoo facade: input specs per (arch × shape) cell and batch axes.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that cell — weak-type-correct, shardable, no device
+allocation — exactly what ``jax.jit(...).lower(**specs)`` needs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.multimodal import frontend_num_embeds
+
+I32 = jnp.int32
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract train/prefill batch: tokens/labels (+ frontend embeds)."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, Any] = {}
+    if shape.kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), I32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), I32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), I32)
+    if cfg.frontend is not None and shape.kind != "decode":
+        n = frontend_num_embeds(cfg, s)
+        key = "frames" if cfg.is_encdec else "patches"
+        specs[key] = jax.ShapeDtypeStruct((b, n, cfg.frontend.embed_dim), dt)
+    return specs
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Logical activation axes per batch entry (for in_shardings)."""
+    axes: Dict[str, Any] = {"tokens": ("act_batch", None)}
+    if shape.kind == "train":
+        axes["labels"] = ("act_batch", None)
+    if cfg.frontend is not None and shape.kind != "decode":
+        key = "frames" if cfg.is_encdec else "patches"
+        axes[key] = ("act_batch", None, None)
+    return axes
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(specs, logical_axes) for every input of the (arch × shape) cell.
+
+    train/prefill → {'batch': …}; decode → {'batch': …, 'cache': …}.
+    """
+    specs: Dict[str, Any] = {"batch": batch_specs(cfg, shape)}
+    axes: Dict[str, Any] = {"batch": batch_axes(cfg, shape)}
+    if shape.kind == "decode":
+        enc_len = shape.seq_len if cfg.is_encdec else 0
+        cspec, caxes = T.cache_spec(cfg, shape.global_batch, shape.seq_len,
+                                    enc_len)
+        specs["cache"] = cspec
+        axes["cache"] = caxes
+    return specs, axes
+
+
+def synth_batch(key: jax.Array, cfg: ModelConfig, shape: ShapeConfig
+                ) -> Dict[str, Any]:
+    """Concrete random batch matching batch_specs (tests/examples)."""
+    from repro.models.multimodal import synth_patches
+    specs = batch_specs(cfg, shape)
+    out: Dict[str, Any] = {}
+    k1, k2, k3 = jax.random.split(key, 3)
+    out["tokens"] = jax.random.randint(
+        k1, specs["tokens"].shape, 0, cfg.vocab_size, I32)
+    if "labels" in specs:
+        out["labels"] = jax.random.randint(
+            k2, specs["labels"].shape, 0, cfg.vocab_size, I32)
+    for key_ in ("patches", "frames"):
+        if key_ in specs:
+            out[key_] = synth_patches(k3, cfg, shape.global_batch,
+                                      shape.seq_len,
+                                      dtype=specs[key_].dtype)
+    return out

@@ -1,0 +1,310 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (full / sliding
+window / decode-with-cache), SwiGLU MLP, embeddings.
+
+All matmuls accumulate in fp32 (``preferred_element_type``) and cast back to
+the compute dtype. Attention over long sequences uses a flash-style chunked
+implementation (scan over query blocks × key blocks with online softmax) so
+the 32k-prefill shapes never materialize an S×S score tensor.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.runtime import flags
+from repro.sharding.axes import ParamBuilder
+
+F32 = jnp.float32
+
+
+def dtype_of(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(b: ParamBuilder, name: str, dim: int):
+    return {"scale": b.param(f"{name}/scale", (dim,), ("norm",), init="ones")}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(F32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(F32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(F32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention params
+# ---------------------------------------------------------------------------
+
+
+def attention_init(b: ParamBuilder, name: str, cfg: ModelConfig) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": b.param(f"{name}/wq", (d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": b.param(f"{name}/wk", (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": b.param(f"{name}/wv", (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": b.param(f"{name}/wo", (h, hd, d), ("heads", "head_dim", "embed"),
+                      scale=1.0 / math.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = b.param(f"{name}/bq", (h, hd), ("heads", "head_dim"), init="zeros")
+        p["bk"] = b.param(f"{name}/bk", (kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = b.param(f"{name}/bv", (kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return p
+
+
+def qkv_project(params, x: jax.Array, cfg: ModelConfig,
+                positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,S,E) → q:(B,S,H,D), k/v:(B,S,Kv,D) with RoPE applied."""
+    dt = x.dtype
+    q = jnp.einsum("bse,ehd->bshd", x, params["wq"],
+                   preferred_element_type=F32).astype(dt)
+    k = jnp.einsum("bse,ehd->bshd", x, params["wk"],
+                   preferred_element_type=F32).astype(dt)
+    v = jnp.einsum("bse,ehd->bshd", x, params["wv"],
+                   preferred_element_type=F32).astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_project(params, attn: jax.Array) -> jax.Array:
+    return jnp.einsum("bshd,hde->bse", attn, params["wo"],
+                      preferred_element_type=F32).astype(attn.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q:(B,Sq,H,D) k:(B,Sk,Kv,D) → (B,Kv,G,Sq,Sk) fp32, G = H//Kv."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                      preferred_element_type=F32) / math.sqrt(d)
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array, out_dtype) -> jax.Array:
+    """probs:(B,Kv,G,Sq,Sk) v:(B,Sk,Kv,D) → (B,Sq,H,D)."""
+    b, kvh, g, sq, sk = probs.shape
+    o = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                   preferred_element_type=F32)
+    return o.reshape(b, sq, kvh * g, -1).astype(out_dtype)
+
+
+def chunked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Online-softmax attention, O(chunk²) memory.
+
+    q: (B,Sq,H,D); k,v: (B,Sk,Kv,D). ``window``>0 applies sliding-window
+    masking (key position > query position - window). ``q_offset`` is the
+    absolute position of q[0] relative to k[0] (for prefill Sq == Sk → 0).
+    Sliding-window prefill statically skips key chunks outside the band —
+    SWA archs do O(S·W) work, not O(S²).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0, (sq, sk, q_chunk, kv_chunk)
+    kvh = k.shape[2]
+    g = h // kvh
+
+    q_pos_base = jnp.arange(q_chunk) + q_offset
+    k_pos_base = jnp.arange(kv_chunk)
+
+    def one_q_chunk(qi, qc):
+        # qc: (B, q_chunk, H, D)
+        def inner(carry, ki):
+            m, l, acc = carry
+            kc = lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, axis=1)
+            vc = lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, axis=1)
+            s = _gqa_scores(qc, kc)                    # (B,Kv,G,qc,kc) f32
+            qpos = q_pos_base + qi * q_chunk           # (qc,)
+            kpos = k_pos_base + ki * kv_chunk          # (kc,)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            scale = jnp.exp(m - m_new)
+            l_new = l * scale + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(v.dtype), vc,
+                            preferred_element_type=F32)
+            acc_new = acc * scale[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk), NEG_INF, F32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), F32)
+        a0 = jnp.zeros((b, kvh, g, q_chunk, d), F32)
+
+        if causal or window > 0:
+            # Statically bound the kv range per q chunk: causal → chunks
+            # 0..hi; SWA → chunks lo..hi. Python loop (static) keeps HLO lean.
+            q_lo = qi * q_chunk + q_offset
+            q_hi = q_lo + q_chunk - 1
+            hi = min(nk - 1, q_hi // kv_chunk) if causal else nk - 1
+            lo = max(0, (q_lo - window + 1) // kv_chunk) if window > 0 else 0
+            carry = (m0, l0, a0)
+            for ki in range(lo, hi + 1):
+                carry, _ = inner(carry, ki)
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = lax.scan(inner, (m0, l0, a0), jnp.arange(nk),
+                                      unroll=flags.scan_unroll())
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        return out.reshape(b, kvh * g, q_chunk, d).transpose(0, 2, 1, 3)
+
+    outs = []
+    for qi in range(nq):
+        qc = lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        outs.append(one_q_chunk(qi, qc))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype) if nq > 1 else outs[0].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    valid_mask: jax.Array,
+) -> jax.Array:
+    """Single-step decode: q (B,1,H,D) over cache (B,T,Kv,D).
+
+    ``valid_mask`` (B,T) marks filled cache slots. Softmax over the cache's
+    T dim composes with a sequence-sharded cache: XLA turns the max/sum
+    reductions into collectives (distributed flash-decode, DESIGN §6).
+    """
+    s = _gqa_scores(q, k_cache)                        # (B,Kv,G,1,T) f32
+    s = jnp.where(valid_mask[:, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    probs = p / jnp.maximum(l, 1e-37)
+    return _gqa_out(probs, v_cache, q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(b: ParamBuilder, name: str, d_model: int, d_ff: int) -> Dict:
+    return {
+        "wi_gate": b.param(f"{name}/wi_gate", (d_model, d_ff), ("embed", "mlp")),
+        "wi_up": b.param(f"{name}/wi_up", (d_model, d_ff), ("embed", "mlp")),
+        "wo": b.param(f"{name}/wo", (d_ff, d_model), ("mlp", "embed"),
+                      scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def mlp_apply(params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    gate = jnp.einsum("bse,ef->bsf", x, params["wi_gate"],
+                      preferred_element_type=F32)
+    up = jnp.einsum("bse,ef->bsf", x, params["wi_up"],
+                    preferred_element_type=F32)
+    h = (jax.nn.silu(gate) * up).astype(dt)
+    return jnp.einsum("bsf,fe->bse", h, params["wo"],
+                      preferred_element_type=F32).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(b: ParamBuilder, cfg: ModelConfig) -> Dict:
+    p = {"tok": b.param("embed/tok", (cfg.vocab_size, cfg.d_model),
+                        ("vocab", "embed"), scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["head"] = b.param("embed/head", (cfg.d_model, cfg.vocab_size),
+                            ("embed", "vocab"),
+                            scale=1.0 / math.sqrt(cfg.d_model))
+    return p
+
+
+def embed_tokens(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    # one-hot-free gather; scale as in most llama-family impls (no scale)
+    return params["tok"].astype(dtype_of(cfg))[tokens]
+
+
+def lm_logits(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B,S,E) → (B,S,V) fp32 logits."""
+    if cfg.tie_embeddings:
+        w = params["tok"]                              # (V,E)
+        return jnp.einsum("bse,ve->bsv", x, w.astype(x.dtype),
+                          preferred_element_type=F32)
+    return jnp.einsum("bse,ev->bsv", x, params["head"].astype(x.dtype),
+                      preferred_element_type=F32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  label_smoothing: float = 0.0) -> jax.Array:
+    """Mean next-token CE. logits (B,S,V) fp32, labels (B,S) int32.
+
+    Uses an einsum-with-one-hot for the label logit so the reduction over a
+    model-sharded vocab dim stays a partial-sum + all-reduce (no gather).
+    """
+    v = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits, axis=-1)            # (B,S)
+    onehot = jax.nn.one_hot(labels, v, dtype=logits.dtype)
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - label_logit
+    if label_smoothing > 0.0:
+        smooth = lse - jnp.mean(logits, axis=-1)
+        nll = (1 - label_smoothing) * nll + label_smoothing * smooth
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,288 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked matmul formulation.
+
+The SSD scan is computed per chunk of length Q: intra-chunk terms are dense
+(Q×Q) matmuls (MXU-shaped), inter-chunk terms flow through a tiny sequential
+`lax.scan` carrying the (H, N, P) state. Decode is the exact one-step
+recurrence with a conv ring state + SSM state cache.
+
+Sharding: d_inner/heads shard over the `model` axis (column-parallel
+in-proj, row-parallel out-proj); B/C group projections are replicated
+(G·N is small).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.runtime import flags
+from repro.models.layers import rmsnorm
+from repro.sharding.axes import ParamBuilder
+
+F32 = jnp.float32
+
+
+def _inv_softplus(x: np.ndarray) -> np.ndarray:
+    return x + np.log(-np.expm1(-x))
+
+
+def mamba_init(b: ParamBuilder, name: str, cfg: ModelConfig) -> Dict:
+    s = cfg.ssm
+    d, di = cfg.d_model, s.d_inner(cfg.d_model)
+    h, g, n, w = s.n_heads(cfg.d_model), s.n_groups, s.d_state, s.conv_width
+    gn = g * n
+    # deterministic SSD inits (A ∈ [1,16], dt log-uniform in [dt_min, dt_max])
+    a_init = np.log(np.linspace(1.0, 16.0, h, dtype=np.float32))
+    dt_init = _inv_softplus(np.exp(np.linspace(
+        math.log(s.dt_min), math.log(s.dt_max), h)).astype(np.float32))
+    return {
+        "w_z": b.param(f"{name}/w_z", (d, di), ("embed", "dinner")),
+        "w_x": b.param(f"{name}/w_x", (d, di), ("embed", "dinner")),
+        "w_B": b.param(f"{name}/w_B", (d, gn), ("embed", None)),
+        "w_C": b.param(f"{name}/w_C", (d, gn), ("embed", None)),
+        "w_dt": b.param(f"{name}/w_dt", (d, h), ("embed", "ssm_heads")),
+        "conv_x": b.param(f"{name}/conv_x", (w, di), ("conv", "dinner"),
+                          scale=1.0 / math.sqrt(w)),
+        "conv_B": b.param(f"{name}/conv_B", (w, gn), ("conv", None),
+                          scale=1.0 / math.sqrt(w)),
+        "conv_C": b.param(f"{name}/conv_C", (w, gn), ("conv", None),
+                          scale=1.0 / math.sqrt(w)),
+        "A_log": b.custom(f"{name}/A_log", jnp.asarray(a_init), ("ssm_heads",)),
+        "dt_bias": b.custom(f"{name}/dt_bias", jnp.asarray(dt_init), ("ssm_heads",)),
+        "D": b.param(f"{name}/D", (h,), ("ssm_heads",), init="ones"),
+        "norm_scale": b.param(f"{name}/norm_scale", (di,), ("dinner",), init="ones"),
+        "out_proj": b.param(f"{name}/out_proj", (di, d), ("dinner", "embed"),
+                            scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C), kernel: (W,C) → (B,S,C)."""
+    w = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    s = x.shape[1]
+    out = jnp.zeros_like(x, dtype=F32)
+    for i in range(w):
+        out = out + xp[:, i:i + s].astype(F32) * kernel[i].astype(F32)
+    return out.astype(x.dtype)
+
+
+def _conv_step(state: jax.Array, xt: jax.Array, kernel: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """state: (B,W-1,C), xt: (B,C) → (new_state, yt)."""
+    window = jnp.concatenate([state, xt[:, None]], axis=1)   # (B,W,C)
+    yt = jnp.einsum("bwc,wc->bc", window.astype(F32),
+                    kernel.astype(F32)).astype(xt.dtype)
+    return window[:, 1:], yt
+
+
+def _project(params, u: jax.Array, cfg: ModelConfig):
+    """u: (B,S,E) → z,x,(B),(C),dt before conv/activation."""
+    dt_ = u.dtype
+    z = jnp.einsum("bse,ei->bsi", u, params["w_z"],
+                   preferred_element_type=F32).astype(dt_)
+    x = jnp.einsum("bse,ei->bsi", u, params["w_x"],
+                   preferred_element_type=F32).astype(dt_)
+    bb = jnp.einsum("bse,ei->bsi", u, params["w_B"],
+                    preferred_element_type=F32).astype(dt_)
+    cc = jnp.einsum("bse,ei->bsi", u, params["w_C"],
+                    preferred_element_type=F32).astype(dt_)
+    dt_raw = jnp.einsum("bse,eh->bsh", u, params["w_dt"],
+                        preferred_element_type=F32)
+    return z, x, bb, cc, dt_raw
+
+
+def mamba_apply(params, u: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Training forward. u: (B,S,E) → (B,S,E)."""
+    y, _ = _mamba_forward(params, u, cfg, return_state=False)
+    return y
+
+
+def mamba_apply_with_state(params, u: jax.Array, cfg: ModelConfig):
+    """Prefill forward: returns (y, decode-cache entry)."""
+    return _mamba_forward(params, u, cfg, return_state=True)
+
+
+def _tail_window(x: jax.Array, w: int) -> jax.Array:
+    """Last w timesteps of (B,S,C), left-padded with zeros if S < w."""
+    s = x.shape[1]
+    if s >= w:
+        return x[:, s - w:]
+    return jnp.pad(x, ((0, 0), (w - s, 0), (0, 0)))
+
+
+def _mamba_forward(params, u: jax.Array, cfg: ModelConfig,
+                   return_state: bool):
+    s_cfg = cfg.ssm
+    bsz, seq0, _ = u.shape
+    h, g, n, p = (s_cfg.n_heads(cfg.d_model), s_cfg.n_groups, s_cfg.d_state,
+                  s_cfg.head_dim)
+    q = min(s_cfg.chunk_size, seq0)
+    # left-pad to a chunk multiple: zero inputs contribute nothing to the
+    # state (dt·x·B = 0) and the initial state is zero, so outputs for the
+    # real positions are exact.
+    pad = (-seq0) % q
+    if pad:
+        u = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+    seq = seq0 + pad
+    nc = seq // q
+    dt_ = u.dtype
+
+    z, x, bb, cc, dt_raw = _project(params, u, cfg)
+    state_entry = None
+    if return_state:
+        w = s_cfg.conv_width
+        state_entry = {"conv_x": _tail_window(x, w - 1),
+                       "conv_B": _tail_window(bb, w - 1),
+                       "conv_C": _tail_window(cc, w - 1)}
+    x = jax.nn.silu(_causal_conv(x, params["conv_x"]).astype(F32)).astype(dt_)
+    bb = jax.nn.silu(_causal_conv(bb, params["conv_B"]).astype(F32)).astype(dt_)
+    cc = jax.nn.silu(_causal_conv(cc, params["conv_C"]).astype(F32)).astype(dt_)
+
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"].astype(F32))   # (B,S,H)
+    a = -jnp.exp(params["A_log"].astype(F32))                      # (H,)
+    alpha = dt * a                                                 # (B,S,H) ≤ 0
+
+    xr = x.reshape(bsz, nc, q, h, p)
+    br = bb.reshape(bsz, nc, q, g, n)
+    cr = cc.reshape(bsz, nc, q, g, n)
+    dtr = dt.reshape(bsz, nc, q, h)
+    ar = alpha.reshape(bsz, nc, q, h)
+    cum = jnp.cumsum(ar, axis=2)                                   # inclusive
+
+    # ---- intra-chunk (dense, masked) --------------------------------------
+    # scores[l,s] = C_l · B_s per group, broadcast to that group's heads
+    heads_per_g = h // g
+    scores = jnp.einsum("bclgn,bcsgn->bcgls", cr.astype(F32), br.astype(F32),
+                        preferred_element_type=F32)
+    scores = jnp.repeat(scores, heads_per_g, axis=2)               # (b,c,h,l,s)
+    # decay[l,s] = exp(cum[l] - cum[s]) for l ≥ s. Mask the exponent BEFORE
+    # exp: for l < s the difference is positive and exp overflows to inf,
+    # which poisons the backward pass (inf · 0 = NaN in the where-grad).
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]           # (b,c,l,s,h)
+    diff = jnp.where(mask[None, None, :, :, None], diff, -1e30)
+    decay = jnp.exp(diff)
+    decay = jnp.moveaxis(decay, -1, 2)                             # (b,c,h,l,s)
+    m = jnp.where(mask[None, None, None], scores * decay, 0.0)
+    m = m * jnp.moveaxis(dtr, -1, 2)[:, :, :, None, :]             # × dt_s
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", m.astype(dt_), xr,
+                         preferred_element_type=F32)
+
+    # ---- chunk states ------------------------------------------------------
+    last = cum[:, :, -1:, :]                                       # (b,c,1,h)
+    w_s = jnp.exp(last - cum) * dtr                                # (b,c,q,h)
+    br_h = jnp.repeat(br, heads_per_g, axis=3)                     # (b,c,q,h,n)
+    chunk_state = jnp.einsum("bcshn,bcsh,bcshp->bchnp",
+                             br_h.astype(F32), w_s, xr.astype(F32),
+                             preferred_element_type=F32)           # (b,c,h,n,p)
+
+    # ---- inter-chunk sequential scan --------------------------------------
+    cr_h = jnp.repeat(cr, heads_per_g, axis=3)                     # (b,c,q,h,n)
+
+    def step(carry, inp):
+        st = carry                                                 # (b,h,n,p)
+        c_blk, cum_blk, s_blk, last_blk = inp
+        y = jnp.einsum("bshn,bsh,bhnp->bshp", c_blk, jnp.exp(cum_blk), st,
+                       preferred_element_type=F32)
+        st_new = jnp.exp(last_blk)[:, :, None, None] * st + s_blk
+        return st_new, y
+
+    xs = (jnp.moveaxis(cr_h.astype(F32), 1, 0),
+          jnp.moveaxis(cum, 1, 0),
+          jnp.moveaxis(chunk_state, 1, 0),
+          jnp.moveaxis(last[:, :, 0, :], 1, 0))
+    st0 = jnp.zeros((bsz, h, n, p), F32)
+    final_state, y_inter = lax.scan(step, st0, xs,
+                                    unroll=flags.scan_unroll())                 # (c,b,q,h,p)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)
+
+    y = (y_intra + y_inter).reshape(bsz, seq, h, p)
+    y = y + params["D"].astype(F32)[None, None, :, None] * x.reshape(
+        bsz, seq, h, p).astype(F32)
+    y = y.reshape(bsz, seq, h * p).astype(dt_)
+
+    # gated RMSNorm + out-projection
+    y = y * jax.nn.silu(z.astype(F32)).astype(dt_)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.rms_eps)
+    out = jnp.einsum("bsi,ie->bse", y, params["out_proj"],
+                     preferred_element_type=F32).astype(dt_)
+    if pad:
+        out = out[:, pad:]
+    if return_state:
+        state_entry["state"] = final_state
+        return out, state_entry
+    return out, None
+
+
+# ---------------------------------------------------------------------------
+# Decode (exact one-step recurrence)
+# ---------------------------------------------------------------------------
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    h, g, n, p, w = (s.n_heads(cfg.d_model), s.n_groups, s.d_state,
+                     s.head_dim, s.conv_width)
+    return {
+        "conv_x": jnp.zeros((batch, w - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, g * n), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, g * n), dtype),
+        "state": jnp.zeros((batch, h, n, p), F32),
+    }
+
+
+def mamba_cache_axes(cfg: ModelConfig) -> Dict:
+    return {
+        "conv_x": ("act_batch", None, "act_mlp"),
+        "conv_B": ("act_batch", None, None),
+        "conv_C": ("act_batch", None, None),
+        "state": ("act_batch", "act_heads", None, None),
+    }
+
+
+def mamba_decode_step(params, cache: Dict, ut: jax.Array, cfg: ModelConfig
+                      ) -> Tuple[jax.Array, Dict]:
+    """ut: (B,1,E) one token → (yt (B,1,E), new cache)."""
+    s_cfg = cfg.ssm
+    h, g, n, p = (s_cfg.n_heads(cfg.d_model), s_cfg.n_groups, s_cfg.d_state,
+                  s_cfg.head_dim)
+    dt_ = ut.dtype
+    bsz = ut.shape[0]
+    heads_per_g = h // g
+
+    z, x, bb, cc, dt_raw = _project(params, ut, cfg)
+    conv_x, xt = _conv_step(cache["conv_x"], x[:, 0], params["conv_x"])
+    conv_B, bt = _conv_step(cache["conv_B"], bb[:, 0], params["conv_B"])
+    conv_C, ct = _conv_step(cache["conv_C"], cc[:, 0], params["conv_C"])
+    xt = jax.nn.silu(xt.astype(F32))                               # (B,di)
+    bt = jax.nn.silu(bt.astype(F32)).reshape(bsz, g, n)
+    ct = jax.nn.silu(ct.astype(F32)).reshape(bsz, g, n)
+
+    dt = jax.nn.softplus(dt_raw[:, 0] + params["dt_bias"].astype(F32))  # (B,H)
+    a = -jnp.exp(params["A_log"].astype(F32))
+    decay = jnp.exp(dt * a)                                        # (B,H)
+
+    xh = xt.reshape(bsz, h, p)
+    bh = jnp.repeat(bt, heads_per_g, axis=1)                       # (B,H,N)
+    ch = jnp.repeat(ct, heads_per_g, axis=1)
+    st = cache["state"]                                            # (B,H,N,P)
+    st = decay[:, :, None, None] * st + jnp.einsum(
+        "bhn,bh,bhp->bhnp", bh, dt, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", ch, st)                        # (B,H,P)
+    y = y + params["D"].astype(F32)[None, :, None] * xh
+    y = y.reshape(bsz, 1, h * p).astype(dt_)
+
+    y = y * jax.nn.silu(z.astype(F32)).astype(dt_)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.rms_eps)
+    yt = jnp.einsum("bsi,ie->bse", y, params["out_proj"],
+                    preferred_element_type=F32).astype(dt_)
+    new_cache = {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C,
+                 "state": st}
+    return yt, new_cache

@@ -1,0 +1,196 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-based dispatch.
+
+Routing is computed within fixed-size token *groups* (default 512 tokens) so
+the position-in-expert cumsum never crosses shard boundaries — groups follow
+the batch sharding, experts shard over the `model` axis (expert parallelism),
+and GSPMD materializes the token⇄expert exchange as all-to-alls on the
+dispatch einsums. Over-capacity tokens are dropped (standard practice;
+capacity_factor controls the drop rate and tests use a no-drop factor).
+
+The dispatch/combine use one-hot einsums (T5X/MaxText 'capacity' style) —
+see EXPERIMENTS §Perf for the gather-based variant explored in hillclimbing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import mlp_init, mlp_apply
+from repro.sharding.axes import ParamBuilder, constrain
+
+F32 = jnp.float32
+
+
+def moe_init(b: ParamBuilder, name: str, cfg: ModelConfig, mcfg: MoEConfig) -> Dict:
+    d = cfg.d_model
+    de = mcfg.d_expert or cfg.d_ff
+    x = mcfg.num_experts
+    p = {
+        "router": b.param(f"{name}/router", (d, x), ("embed", None),
+                          scale=0.02, dtype="float32"),
+        "w_gate": b.param(f"{name}/w_gate", (x, d, de),
+                          ("experts", "expert_embed", "expert_mlp")),
+        "w_up": b.param(f"{name}/w_up", (x, d, de),
+                        ("experts", "expert_embed", "expert_mlp")),
+        "w_down": b.param(f"{name}/w_down", (x, de, d),
+                          ("experts", "expert_mlp", "expert_embed"),
+                          scale=1.0 / math.sqrt(de)),
+    }
+    if mcfg.num_shared_experts:
+        p["shared"] = mlp_init(b, f"{name}/shared", d,
+                               mcfg.num_shared_experts * de)
+    return p
+
+
+@jax.custom_vjp
+def _grad_bf16(x):
+    """Identity with a bf16 gradient gate: upstream transposes deliver f32
+    cotangents (loss/logits/norms prefer f32); casting the cotangent at the
+    expert-block boundary keeps every backward partial-sum all-reduce over
+    the data axis in bf16 (EXPERIMENTS §Perf llama4 iteration 2)."""
+    return x
+
+
+def _grad_bf16_fwd(x):
+    return x, None
+
+
+def _grad_bf16_bwd(_, g):
+    # only used on bf16 primals (token_exchange path)
+    return (g.astype(jnp.bfloat16),)
+
+
+_grad_bf16.defvjp(_grad_bf16_fwd, _grad_bf16_bwd)
+
+
+def _capacity(group: int, mcfg: MoEConfig) -> int:
+    c = int(math.ceil(mcfg.capacity_factor * group * mcfg.top_k / mcfg.num_experts))
+    return max(4, min(c, group))
+
+
+def moe_apply(params, x: jax.Array, cfg: ModelConfig, mcfg: MoEConfig,
+              group_size: int = 512, mesh=None
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B,S,E) → (B,S,E), aux-loss dict."""
+    dt = x.dtype
+    bsz, seq, d = x.shape
+    tokens = bsz * seq
+    g_t = min(group_size, tokens)
+    pad = (-tokens) % g_t
+    xf = x.reshape(tokens, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    ng = xf.shape[0] // g_t
+    xg = xf.reshape(ng, g_t, d)                        # (G,T,E)
+
+    nx, k = mcfg.num_experts, mcfg.top_k
+    cap = _capacity(g_t, mcfg)
+
+    logits = jnp.einsum("gte,ex->gtx", xg.astype(F32), params["router"],
+                        preferred_element_type=F32)    # (G,T,X)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)               # (G,T,K)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, nx, dtype=F32)        # (G,T,K,X)
+    flat = onehot.reshape(ng, g_t * k, nx)
+    # position of each (token, k) routing decision within its expert's queue
+    pos = jnp.cumsum(flat, axis=1) - flat              # (G,T·K,X)
+    pos = pos.reshape(ng, g_t, k, nx)
+    within = (pos < cap) & (onehot > 0)
+    slot = jnp.sum(pos * onehot, axis=-1)              # (G,T,K) position
+    keep = jnp.any(within, axis=-1)                    # (G,T,K)
+
+    slot_oh = jax.nn.one_hot(slot.astype(jnp.int32), cap, dtype=F32)
+    # dispatch/combine over K summed out (a token never routes twice to the
+    # same expert, so the sum is exact)
+    dispatch = jnp.einsum("gtkx,gtkc->gtxc", onehot * keep[..., None],
+                          slot_oh)                     # (G,T,X,C) 0/1
+    combine = jnp.einsum("gtkx,gtkc,gtk->gtxc", onehot, slot_oh,
+                         gates * keep)                 # (G,T,X,C)
+
+    acc_t = dt if mcfg.token_exchange else F32
+    xs = jnp.einsum("gtxc,gte->gxce", dispatch.astype(dt), xg,
+                    preferred_element_type=acc_t).astype(dt)  # (G,X,C,E)
+    if mcfg.token_exchange:
+        # force token-exchange: experts stay model-sharded, the embed dim of
+        # the dispatched tokens aligns with the weights' FSDP shards so the
+        # expert matmul contracts locally (+psum) instead of all-gathering
+        # the expert weights every layer (EXPERIMENTS §Perf, llama4 climb)
+        xs = constrain(xs, mesh, None, "act_experts", None,
+                       "act_expert_embed")
+    # under token_exchange the expert matmuls contract a data-sharded dim:
+    # keep the cross-shard partial-sum all-reduce in bf16 (EXPERIMENTS §Perf
+    # iteration 2 — halves the dominant residual collective). acc_t applies
+    # to EVERY moe einsum: one f32-preferring einsum anywhere in the chain
+    # poisons the whole backward cotangent path back to f32 ARs.
+    h_gate = jnp.einsum("gxce,xef->gxcf", xs, params["w_gate"],
+                        preferred_element_type=acc_t)
+    h_up = jnp.einsum("gxce,xef->gxcf", xs, params["w_up"],
+                      preferred_element_type=acc_t)
+    # NB: no f32 upcast here — XLA folds convert(dot) into an f32 dot,
+    # resurrecting the f32 cross-shard all-reduce we're avoiding
+    h = (jax.nn.silu(h_gate) * h_up).astype(dt)
+    ys = jnp.einsum("gxcf,xfe->gxce", h, params["w_down"],
+                    preferred_element_type=acc_t).astype(dt)  # (G,X,C,E)
+    # (acc_t=bf16 under token_exchange keeps the BACKWARD cotangent chain—
+    # whose e-contraction partial-sums all-reduce over 'data'—in bf16 too)
+    if mcfg.token_exchange:
+        ys = constrain(ys, mesh, None, "act_experts", None,
+                       "act_expert_embed")
+    out = jnp.einsum("gxce,gtxc->gte", ys, combine.astype(dt),
+                     preferred_element_type=acc_t).astype(dt)  # (G,T,E)
+    if mcfg.token_exchange:
+        out = _grad_bf16(out)   # gate f32 cotangents out of the expert path
+
+    out = out.reshape(-1, d)
+    if pad:
+        out = out[:tokens]
+    out = out.reshape(bsz, seq, d)
+
+    if mcfg.num_shared_experts:
+        out = out + mlp_apply(params["shared"], x)
+
+    # aux losses (Switch-style load balance + router z-loss)
+    density = jnp.mean(onehot.sum(2), axis=1)          # (G,X) token fraction
+    mean_prob = jnp.mean(probs, axis=1)                # (G,X)
+    lb = nx * jnp.mean(jnp.sum(density * mean_prob, axis=-1)) / k
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {
+        "moe_load_balance": lb.astype(F32),
+        "moe_router_z": z.astype(F32),
+        "moe_drop_fraction": 1.0 - jnp.mean(keep.astype(F32)),
+    }
+    return out, aux
+
+
+def moe_dense_reference(params, x: jax.Array, cfg: ModelConfig,
+                        mcfg: MoEConfig) -> jax.Array:
+    """Oracle: evaluate EVERY expert densely, combine with top-k gates.
+    O(X·T) compute — only for tests (validates routing & dispatch math)."""
+    dt = x.dtype
+    logits = jnp.einsum("bse,ex->bsx", x.astype(F32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, mcfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    gate_full = jnp.zeros_like(probs)
+    gate_full = jnp.take_along_axis(
+        gate_full, idx, axis=-1) * 0  # shape helper
+    gate_full = jax.nn.one_hot(idx, mcfg.num_experts, dtype=F32) * gates[..., None]
+    gate_full = gate_full.sum(axis=-2)                 # (B,S,X)
+
+    hg = jnp.einsum("bse,xef->bsxf", x, params["w_gate"],
+                    preferred_element_type=F32)
+    hu = jnp.einsum("bse,xef->bsxf", x, params["w_up"],
+                    preferred_element_type=F32)
+    h = (jax.nn.silu(hg) * hu).astype(dt)
+    y = jnp.einsum("bsxf,xfe->bsxe", h, params["w_down"],
+                   preferred_element_type=F32)
+    out = jnp.einsum("bsxe,bsx->bse", y, gate_full).astype(dt)
+    if mcfg.num_shared_experts:
+        out = out + mlp_apply(params["shared"], x)
+    return out

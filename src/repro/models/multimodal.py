@@ -1,0 +1,32 @@
+"""Modality frontends — STUBS per the assignment.
+
+[audio]/[vlm] architectures specify the transformer BACKBONE only; the
+vision tower / speech feature extractor is replaced by precomputed
+embeddings supplied through ``input_specs()``. For tests and examples this
+module synthesizes deterministic embeddings with the right statistics.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FrontendConfig, ModelConfig
+
+
+def frontend_num_embeds(cfg: ModelConfig, seq_len: int) -> int:
+    """num_embeds==0 means 'track the sequence length' (audio frames)."""
+    fe = cfg.frontend
+    assert fe is not None
+    return fe.num_embeds if fe.num_embeds else seq_len
+
+
+def synth_patches(key: jax.Array, cfg: ModelConfig, batch: int,
+                  seq_len: int, dtype=jnp.float32) -> jax.Array:
+    """Deterministic stand-in for CLIP/w2v-BERT outputs (unit-ish norm)."""
+    fe = cfg.frontend
+    n = frontend_num_embeds(cfg, seq_len)
+    x = jax.random.normal(key, (batch, n, fe.embed_dim), jnp.float32)
+    x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x.astype(dtype)

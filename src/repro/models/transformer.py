@@ -1,0 +1,526 @@
+"""Flexible decoder-only / encoder-decoder LM assembled from per-layer
+mixer ∈ {attn, mamba2} and FFN ∈ {dense, moe, none} patterns.
+
+Layers are stacked for ``lax.scan`` over *periods*: the layer pattern of a
+hybrid model (e.g. Jamba: attention every 8th layer, MoE every 2nd) repeats
+with period P = lcm(attn_every, moe_every); parameters for each of the P
+positions are stacked over the R = num_layers / P repeats along a leading
+'layers' axis, and the scan body applies the P positions in order. Uniform
+models get P = 1 (plain scan). This keeps compile time O(P) instead of
+O(num_layers) and is remat-friendly.
+
+Three entry points mirror the assignment's shape kinds:
+  * ``loss_fn``      — train_* shapes (full causal forward + CE)
+  * ``prefill``      — prefill_* shapes (forward + KV/SSM cache capture,
+                       last-token logits)
+  * ``decode_step``  — decode_* / long_* shapes (one token against a cache;
+                       KV caches may be sequence-sharded → XLA emits the
+                       distributed flash-decode collectives)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as X
+from repro.runtime import flags
+from repro.sharding.axes import ParamBuilder, constrain, unflatten_axes
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Period / pattern helpers
+# ---------------------------------------------------------------------------
+
+
+def period_of(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.ssm is not None and cfg.num_heads > 0:
+        p = math.lcm(p, cfg.attn_every)
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe_every)
+    if cfg.sliding_window > 0 and cfg.swa_pattern > 1:
+        p = math.lcm(p, cfg.swa_pattern)
+    assert cfg.num_layers % p == 0, (cfg.num_layers, p)
+    return p
+
+
+def attn_chunk(seq: int) -> int:
+    if seq <= 2048:
+        return max(seq, 1)
+    return 2048 if seq >= 16_384 else 1024
+
+
+def _cache_len(cfg: ModelConfig, layer: int, max_len: int) -> int:
+    if cfg.layer_is_swa(layer):
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction (stacked for scan)
+# ---------------------------------------------------------------------------
+
+
+class _Stacked:
+    """ParamBuilder adapter that prepends the (R,) 'layers' stack dim."""
+
+    def __init__(self, b: ParamBuilder, repeats: int):
+        self._b, self._r = b, repeats
+
+    def param(self, name, shape, axes, **kw):
+        return self._b.param(name, (self._r,) + tuple(shape),
+                             ("layers",) + tuple(axes), **kw)
+
+    def custom(self, name, value, axes):
+        if hasattr(value, "shape"):
+            tiled = jnp.broadcast_to(value, (self._r,) + value.shape)
+        else:
+            tiled = jnp.full((self._r,), value)
+        return self._b.custom(name, tiled, ("layers",) + tuple(axes))
+
+
+def _block_init(b, name: str, cfg: ModelConfig, layer: int, cross: bool) -> Dict:
+    p: Dict[str, Any] = {"norm1": L.rmsnorm_init(b, f"{name}/norm1", cfg.d_model)}
+    if cfg.mixer_kind(layer) == "attn":
+        p["attn"] = L.attention_init(b, f"{name}/attn", cfg)
+    else:
+        p["mamba"] = M.mamba_init(b, f"{name}/mamba", cfg)
+    if cross:
+        p["norm_x"] = L.rmsnorm_init(b, f"{name}/norm_x", cfg.d_model)
+        p["cross"] = L.attention_init(b, f"{name}/cross", cfg)
+    fk = cfg.ffn_kind(layer)
+    if fk != "none":
+        p["norm2"] = L.rmsnorm_init(b, f"{name}/norm2", cfg.d_model)
+        if fk == "dense":
+            p["mlp"] = L.mlp_init(b, f"{name}/mlp", cfg.d_model, cfg.d_ff)
+        else:
+            p["moe"] = X.moe_init(b, f"{name}/moe", cfg, cfg.moe)
+    return p
+
+
+def _enc_block_init(b, name: str, cfg: ModelConfig) -> Dict:
+    return {
+        "norm1": L.rmsnorm_init(b, f"{name}/norm1", cfg.d_model),
+        "attn": L.attention_init(b, f"{name}/attn", cfg),
+        "norm2": L.rmsnorm_init(b, f"{name}/norm2", cfg.d_model),
+        "mlp": L.mlp_init(b, f"{name}/mlp", cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(key: Optional[jax.Array], cfg: ModelConfig,
+                abstract: bool = False) -> Tuple[Dict, Dict]:
+    """Returns (params, logical_axes) pytrees with identical structure."""
+    b = ParamBuilder(key, dtype=cfg.param_dtype, abstract=abstract)
+    period = period_of(cfg)
+    repeats = cfg.num_layers // period
+    sb = _Stacked(b, repeats)
+
+    params: Dict[str, Any] = {"embed": L.embedding_init(b, cfg)}
+    params["final_norm"] = L.rmsnorm_init(b, "final_norm", cfg.d_model)
+    params["blocks"] = {
+        f"pos{i}": _block_init(sb, f"blocks/pos{i}", cfg, i, cross=cfg.is_encdec)
+        for i in range(period)
+    }
+    if cfg.is_encdec:
+        eb = _Stacked(b, cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": {"pos0": _enc_block_init(eb, "encoder/blocks/pos0", cfg)},
+            "final_norm": L.rmsnorm_init(b, "encoder/final_norm", cfg.d_model),
+        }
+    if cfg.frontend is not None:
+        params["projector"] = {
+            "w": b.param("projector/w", (cfg.frontend.embed_dim, cfg.d_model),
+                         ("frontend", "embed")),
+            "b": b.param("projector/b", (cfg.d_model,), (None,), init="zeros"),
+        }
+    axes = unflatten_axes(b.axes)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Block application — full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _self_attention(p, x, cfg: ModelConfig, layer: int, positions,
+                    causal: bool, mesh, capture: bool = False):
+    q, k, v = L.qkv_project(p, x, cfg, positions)
+    q = constrain(q, mesh, "act_batch", None, "act_heads", None)
+    window = cfg.sliding_window if cfg.layer_is_swa(layer) else 0
+    c = attn_chunk(x.shape[1])
+    o = L.chunked_attention(q, k, v, causal=causal, window=window,
+                            q_chunk=c, kv_chunk=c)
+    o = L.out_project(p, o)
+    return (o, (k, v)) if capture else (o, None)
+
+
+def _cross_attention(p, h, ck, cv, cfg: ModelConfig):
+    dtv = h.dtype
+    q = jnp.einsum("bse,ehd->bshd", h, p["wq"],
+                   preferred_element_type=F32).astype(dtv)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtv)
+    o = L.chunked_attention(q, ck, cv, causal=False,
+                            q_chunk=attn_chunk(h.shape[1]),
+                            kv_chunk=attn_chunk(ck.shape[1]))
+    return L.out_project(p, o)
+
+
+def cross_kv(p, memory: jax.Array, cfg: ModelConfig):
+    """Project encoder memory to cross-attention K/V (no RoPE)."""
+    dt = memory.dtype
+    k = jnp.einsum("bse,ehd->bshd", memory, p["wk"],
+                   preferred_element_type=F32).astype(dt)
+    v = jnp.einsum("bse,ehd->bshd", memory, p["wv"],
+                   preferred_element_type=F32).astype(dt)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return k, v
+
+
+def _block_apply(p: Dict, x: jax.Array, cfg: ModelConfig, layer: int, *,
+                 positions, causal: bool, mesh,
+                 memory: Optional[jax.Array] = None,
+                 capture: bool = False):
+    """Full-seq block. Returns (x, aux, cache_entry|None)."""
+    aux: Dict[str, jax.Array] = {}
+    entry: Dict[str, Any] = {}
+    h = L.rmsnorm(p["norm1"], x, cfg.rms_eps)
+    if "attn" in p:
+        h, kv = _self_attention(p["attn"], h, cfg, layer, positions, causal,
+                                mesh, capture)
+        if capture:
+            entry["k"], entry["v"] = kv
+    else:
+        if capture:
+            h, st = M.mamba_apply_with_state(p["mamba"], h, cfg)
+            entry.update(st)
+        else:
+            h = M.mamba_apply(p["mamba"], h, cfg)
+    x = x + h
+    if "cross" in p:
+        h = L.rmsnorm(p["norm_x"], x, cfg.rms_eps)
+        ck, cv = cross_kv(p["cross"], memory, cfg)
+        if capture:
+            entry["ck"], entry["cv"] = ck, cv
+        x = x + _cross_attention(p["cross"], h, ck, cv, cfg)
+    if "norm2" in p:
+        h = L.rmsnorm(p["norm2"], x, cfg.rms_eps)
+        if "mlp" in p:
+            h = L.mlp_apply(p["mlp"], h)
+        else:
+            h, aux = X.moe_apply(p["moe"], h, cfg, cfg.moe, mesh=mesh)
+        x = x + h
+    x = constrain(x, mesh, "act_batch", None, None)
+    return x, aux, (entry if capture else None)
+
+
+def _scan_blocks(params_blocks: Dict, x: jax.Array, cfg: ModelConfig, *,
+                 positions, causal: bool, mesh, remat: str = "block",
+                 memory: Optional[jax.Array] = None, capture: bool = False):
+    period = period_of(cfg)
+
+    def body(carry, per_repeat):
+        h, aux_acc = carry
+        entries = {}
+        for i in range(period):
+            h, aux, entry = _block_apply(
+                per_repeat[f"pos{i}"], h, cfg, i, positions=positions,
+                causal=causal, mesh=mesh, memory=memory, capture=capture)
+            for k_, v_ in aux.items():
+                aux_acc[k_] = aux_acc.get(k_, 0.0) + v_
+            if capture:
+                entries[f"pos{i}"] = entry
+        return (h, aux_acc), (entries if capture else None)
+
+    if remat in ("block", "full") and not capture:
+        body = jax.checkpoint(
+            body, policy=(jax.checkpoint_policies.nothing_saveable
+                          if remat == "full" else
+                          jax.checkpoint_policies.dots_with_no_batch_dims_saveable))
+
+    aux0 = {}
+    if cfg.moe is not None:
+        aux0 = {"moe_load_balance": jnp.zeros((), F32),
+                "moe_router_z": jnp.zeros((), F32),
+                "moe_drop_fraction": jnp.zeros((), F32)}
+    (x, aux), ys = lax.scan(body, (x, aux0), params_blocks,
+                            unroll=flags.scan_unroll())
+    return x, aux, ys
+
+
+def _encode(params, memory_in: jax.Array, cfg: ModelConfig, mesh,
+            remat: str) -> jax.Array:
+    enc = params["encoder"]
+    positions = jnp.arange(memory_in.shape[1])[None]
+
+    def body(h, per_repeat):
+        p = per_repeat["pos0"]
+        hn = L.rmsnorm(p["norm1"], h, cfg.rms_eps)
+        hn, _ = _self_attention(p["attn"], hn, cfg, 0, positions, False, mesh)
+        h = h + hn
+        hn = L.rmsnorm(p["norm2"], h, cfg.rms_eps)
+        h = h + L.mlp_apply(p["mlp"], hn)
+        return h, None
+
+    if remat in ("block", "full"):
+        body = jax.checkpoint(body)
+    h, _ = lax.scan(body, memory_in, enc["blocks"],
+                    unroll=flags.scan_unroll())
+    return L.rmsnorm(enc["final_norm"], h, cfg.rms_eps)
+
+
+def _project_frontend(params, embeds: jax.Array, dtype) -> jax.Array:
+    proj = jnp.einsum("bpe,ed->bpd", embeds.astype(dtype),
+                      params["projector"]["w"].astype(dtype),
+                      preferred_element_type=F32).astype(dtype)
+    return proj + params["projector"]["b"].astype(dtype)
+
+
+def _embed_inputs(params, batch: Dict, cfg: ModelConfig, mesh) -> jax.Array:
+    x = L.embed_tokens(params["embed"], batch["tokens"], cfg)
+    if (cfg.frontend is not None and cfg.frontend.kind == "vision"
+            and "patches" in batch):
+        proj = _project_frontend(params, batch["patches"], x.dtype)
+        npatch = min(proj.shape[1], x.shape[1])
+        x = lax.dynamic_update_slice(x, proj[:, :npatch], (0, 0, 0))
+    return constrain(x, mesh, "act_batch", None, None)
+
+
+def _maybe_memory(params, batch, cfg: ModelConfig, mesh, remat, dtype):
+    if not cfg.is_encdec:
+        return None
+    mem_in = _project_frontend(params, batch["frames"], dtype)
+    return _encode(params, mem_in, cfg, mesh, remat)
+
+
+# ---------------------------------------------------------------------------
+# Entry point 1: training
+# ---------------------------------------------------------------------------
+
+
+def forward(params, batch: Dict, cfg: ModelConfig, mesh=None,
+            remat: str = "block") -> Tuple[jax.Array, Dict]:
+    """Full-sequence forward → (logits (B,S,V) fp32, aux)."""
+    x = _embed_inputs(params, batch, cfg, mesh)
+    positions = jnp.arange(x.shape[1])[None]
+    memory = _maybe_memory(params, batch, cfg, mesh, remat, x.dtype)
+    x, aux, _ = _scan_blocks(params["blocks"], x, cfg, positions=positions,
+                             causal=True, mesh=mesh, remat=remat,
+                             memory=memory)
+    x = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    logits = L.lm_logits(params["embed"], x, cfg)
+    logits = constrain(logits, mesh, "act_batch", None, "act_vocab")
+    return logits, aux
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig, mesh=None,
+            remat: str = "block", label_smoothing: float = 0.0
+            ) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, batch, cfg, mesh, remat)
+    mask = (batch["labels"] >= 0).astype(F32)
+    labels = jnp.maximum(batch["labels"], 0)
+    ce = L.cross_entropy(logits, labels, mask, label_smoothing)
+    loss = ce
+    if cfg.moe is not None:
+        loss = (loss
+                + cfg.moe.router_aux_weight * aux.get("moe_load_balance", 0.0)
+                + cfg.moe.router_z_weight * aux.get("moe_router_z", 0.0))
+    metrics = {"ce": ce, **aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Entry point 2: prefill (forward + cache capture)
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch: Dict, cfg: ModelConfig, mesh=None,
+            max_len: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    """Returns (last-token logits (B,V) fp32, cache).
+
+    ``max_len`` sizes full-attention cache buffers (≥ seq + tokens you plan
+    to decode); SWA layers always use ring buffers of the window size.
+    """
+    x = _embed_inputs(params, batch, cfg, mesh)
+    seq = x.shape[1]
+    max_len = max_len or seq
+    positions = jnp.arange(seq)[None]
+    memory = _maybe_memory(params, batch, cfg, mesh, "block", x.dtype)
+    x, _, entries = _scan_blocks(params["blocks"], x, cfg,
+                                 positions=positions, causal=True, mesh=mesh,
+                                 remat="none", memory=memory, capture=True)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.rms_eps)
+    logits = L.lm_logits(params["embed"], x, cfg)[:, 0]
+
+    # post-process captured entries into decode-cache layout
+    cache_layers: Dict[str, Any] = {}
+    period = period_of(cfg)
+    for i in range(period):
+        e = entries[f"pos{i}"]
+        out: Dict[str, Any] = {}
+        if "k" in e:
+            buf = _cache_len(cfg, i, max_len)
+            if cfg.layer_is_swa(i) and buf < seq:
+                # SWA ring: token p → slot p % W
+                slots = (jnp.arange(seq - buf, seq)) % buf
+                k = jnp.zeros(e["k"].shape[:2] + (buf,) + e["k"].shape[3:],
+                              e["k"].dtype).at[:, :, slots].set(e["k"][:, :, -buf:])
+                v = jnp.zeros_like(k).at[:, :, slots].set(e["v"][:, :, -buf:])
+                out["k"], out["v"] = k, v
+            elif buf > seq:                    # headroom for decode steps
+                padw = ((0, 0), (0, 0), (0, buf - seq), (0, 0), (0, 0))
+                out["k"] = jnp.pad(e["k"], padw)
+                out["v"] = jnp.pad(e["v"], padw)
+            else:
+                out["k"], out["v"] = e["k"], e["v"]
+            out["k"] = constrain(out["k"], mesh, None, "act_batch",
+                                 "act_kv_seq", "act_kv_heads", None)
+            out["v"] = constrain(out["v"], mesh, None, "act_batch",
+                                 "act_kv_seq", "act_kv_heads", None)
+        for key_ in ("conv_x", "conv_B", "conv_C", "state"):
+            if key_ in e:
+                out[key_] = e[key_]
+        for key_ in ("ck", "cv"):
+            if key_ in e:
+                out[key_] = e[key_]
+        cache_layers[f"pos{i}"] = out
+    cache = {"layers": cache_layers,
+             "index": jnp.full((), seq, jnp.int32)}
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Entry point 3: single-token decode
+# ---------------------------------------------------------------------------
+
+
+def _attn_decode(p, h, cfg: ModelConfig, layer: int, entry: Dict,
+                 index: jax.Array, mesh):
+    """h: (B,1,E); entry holds k/v buffers (B,T,Kv,D)."""
+    bsz = h.shape[0]
+    buf = entry["k"].shape[1]
+    pos = jnp.full((bsz, 1), index, jnp.int32)
+    q, k, v = L.qkv_project(p, h, cfg, pos)
+    # SWA layers use a ring buffer (token p → slot p % W); full-attention
+    # layers write at the absolute index (buffer must be pre-sized).
+    slot = index % buf if cfg.layer_is_swa(layer) else index
+    kc = lax.dynamic_update_slice(entry["k"], k.astype(entry["k"].dtype),
+                                  (0, slot, 0, 0))
+    vc = lax.dynamic_update_slice(entry["v"], v.astype(entry["v"].dtype),
+                                  (0, slot, 0, 0))
+    kc = constrain(kc, mesh, "act_batch", "act_kv_seq", "act_kv_heads", None)
+    vc = constrain(vc, mesh, "act_batch", "act_kv_seq", "act_kv_heads", None)
+    count = jnp.minimum(index + 1, buf)
+    valid = (jnp.arange(buf)[None] < count).astype(bool)
+    valid = jnp.broadcast_to(valid, (bsz, buf))
+    o = L.decode_attention(q, kc, vc, valid)
+    return L.out_project(p, o), {"k": kc, "v": vc}
+
+
+def decode_step(params, cache: Dict, tokens: jax.Array, cfg: ModelConfig,
+                mesh=None) -> Tuple[jax.Array, Dict]:
+    """One decode step. tokens: (B,1) → (logits (B,V) fp32, new cache)."""
+    index = cache["index"]
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = constrain(x, mesh, "act_batch", None, None)
+    period = period_of(cfg)
+
+    def body(carry, xs):
+        h, = carry
+        per_repeat, cache_repeat = xs
+        new_entries = {}
+        for i in range(period):
+            p = per_repeat[f"pos{i}"]
+            e = cache_repeat[f"pos{i}"]
+            hn = L.rmsnorm(p["norm1"], h, cfg.rms_eps)
+            if "attn" in p:
+                hn, ne = _attn_decode(p["attn"], hn, cfg, i, e, index, mesh)
+            else:
+                hn, ne = M.mamba_decode_step(p["mamba"], e, hn, cfg)
+            h = h + hn
+            if "cross" in p:
+                hc = L.rmsnorm(p["norm_x"], h, cfg.rms_eps)
+                h = h + _cross_attention(p["cross"], hc, e["ck"], e["cv"], cfg)
+                ne["ck"], ne["cv"] = e["ck"], e["cv"]
+            if "norm2" in p:
+                hn = L.rmsnorm(p["norm2"], h, cfg.rms_eps)
+                if "mlp" in p:
+                    h = h + L.mlp_apply(p["mlp"], hn)
+                else:
+                    out, _ = X.moe_apply(p["moe"], hn, cfg, cfg.moe,
+                                         mesh=mesh)
+                    h = h + out
+            new_entries[f"pos{i}"] = ne
+        return (h,), new_entries
+
+    (x,), new_layers = lax.scan(body, (x,), (params["blocks"], cache["layers"]),
+                                unroll=flags.scan_unroll())
+    x = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    logits = L.lm_logits(params["embed"], x, cfg)[:, 0]
+    return logits, {"layers": new_layers, "index": index + 1}
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (for the dry-run: ShapeDtypeStructs, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> Tuple[Dict, Dict]:
+    """Abstract cache pytree + logical-axes pytree for decode shapes."""
+    period = period_of(cfg)
+    repeats = cfg.num_layers // period
+    dt = jnp.dtype(cfg.dtype)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    layers: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    for i in range(period):
+        e: Dict[str, Any] = {}
+        a: Dict[str, Any] = {}
+        if cfg.mixer_kind(i) == "attn":
+            buf = _cache_len(cfg, i, max_len)
+            e["k"] = jax.ShapeDtypeStruct((repeats, batch, buf, kv, hd), dt)
+            e["v"] = jax.ShapeDtypeStruct((repeats, batch, buf, kv, hd), dt)
+            a["k"] = ("layers", "act_batch", "act_kv_seq", "act_kv_heads", None)
+            a["v"] = a["k"]
+        else:
+            s = cfg.ssm
+            di = s.d_inner(cfg.d_model)
+            h, g, n, p_, w = (s.n_heads(cfg.d_model), s.n_groups, s.d_state,
+                              s.head_dim, s.conv_width)
+            e["conv_x"] = jax.ShapeDtypeStruct((repeats, batch, w - 1, di), dt)
+            e["conv_B"] = jax.ShapeDtypeStruct((repeats, batch, w - 1, g * n), dt)
+            e["conv_C"] = jax.ShapeDtypeStruct((repeats, batch, w - 1, g * n), dt)
+            e["state"] = jax.ShapeDtypeStruct((repeats, batch, h, n, p_), F32)
+            a["conv_x"] = ("layers", "act_batch", None, "act_mlp")
+            a["conv_B"] = ("layers", "act_batch", None, None)
+            a["conv_C"] = ("layers", "act_batch", None, None)
+            a["state"] = ("layers", "act_batch", "act_heads", None, None)
+        if cfg.is_encdec:
+            e["ck"] = jax.ShapeDtypeStruct((repeats, batch, enc_len, kv, hd), dt)
+            e["cv"] = jax.ShapeDtypeStruct((repeats, batch, enc_len, kv, hd), dt)
+            a["ck"] = ("layers", "act_batch", "act_kv_seq", "act_kv_heads", None)
+            a["cv"] = a["ck"]
+        layers[f"pos{i}"] = e
+        axes[f"pos{i}"] = a
+    spec = {"layers": layers, "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    spec_axes = {"layers": axes, "index": ()}
+    return spec, spec_axes
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0
+               ) -> Dict:
+    """Zero-filled concrete cache (tests / serving from scratch)."""
+    spec, _ = cache_spec(cfg, batch, max_len, enc_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)

@@ -1,0 +1,21 @@
+"""Optimizer dispatch: ocfg.name ∈ {'adamw', 'adafactor'}."""
+from repro.configs.base import OptimConfig
+from repro.optim import adafactor, adamw
+
+
+def _mod(ocfg: OptimConfig):
+    return adafactor if ocfg.name == "adafactor" else adamw
+
+
+def init_opt_state(params, ocfg: OptimConfig):
+    return _mod(ocfg).init_opt_state(params, ocfg)
+
+
+def opt_state_axes(param_axes, ocfg: OptimConfig):
+    return _mod(ocfg).opt_state_axes(param_axes, ocfg)
+
+
+def apply_updates(params, grads, opt_state, ocfg: OptimConfig, lr,
+                  grad_scale: float = 1.0):
+    return _mod(ocfg).apply_updates(params, grads, opt_state, ocfg, lr,
+                                    grad_scale=grad_scale)

@@ -1,0 +1,96 @@
+"""AdamW with decoupled weight decay, global-norm clipping, configurable
+moment dtypes (bf16 moments fit the 400B MoE in HBM — DESIGN §6) and an
+optional fp32 master copy when params are kept in bf16.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+
+F32 = jnp.float32
+
+
+def init_opt_state(params, ocfg: OptimConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(ocfg.moment_dtype)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+    }
+    if ocfg.master_dtype:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(ocfg.master_dtype), params)
+    return state
+
+
+def opt_state_axes(param_axes, ocfg: OptimConfig) -> Dict[str, Any]:
+    """Logical axes for the optimizer state (moments shard like params)."""
+    state = {"step": (), "m": param_axes, "v": param_axes}
+    if ocfg.master_dtype:
+        state["master"] = param_axes
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def apply_updates(params, grads, opt_state, ocfg: OptimConfig, lr: jax.Array,
+                  grad_scale: float = 1.0
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """``grad_scale`` folds the 1/n_micro averaging into the per-leaf f32
+    cast so no full-precision gradient tree ever materializes (the bf16
+    accumulator is the only step-lived gradient buffer)."""
+    step = opt_state["step"] + 1
+    b1, b2 = ocfg.betas
+    gnorm = global_norm(grads) * grad_scale
+    if ocfg.grad_clip > 0:
+        clip = jnp.minimum(1.0, ocfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    else:
+        clip = jnp.ones(())
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+    mdt = jnp.dtype(ocfg.moment_dtype)
+
+    base = opt_state.get("master", params)
+
+    def upd(p, g, m, v):
+        gf = g.astype(F32) * (grad_scale * clip)
+        m_new = b1 * m.astype(F32) + (1 - b1) * gf
+        v_new = b2 * v.astype(F32) + (1 - b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        pf = p.astype(F32)
+        step_vec = mhat / (jnp.sqrt(vhat) + ocfg.eps) + ocfg.weight_decay * pf
+        p_new = pf - lr * step_vec
+        return p_new, m_new.astype(mdt), v_new.astype(mdt)
+
+    out = jax.tree.map(upd, base, grads, opt_state["m"], opt_state["v"])
+    treedef = jax.tree.structure(params)
+    flat = jax.tree.leaves(out, is_leaf=lambda x: isinstance(x, tuple))
+    p_new = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    m_new = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    v_new = jax.tree.unflatten(treedef, [t[2] for t in flat])
+
+    new_state = {"step": step, "m": m_new, "v": v_new}
+    if "master" in opt_state:
+        new_state["master"] = p_new  # fp32 master
+        params_out = jax.tree.map(
+            lambda mp, p: mp.astype(p.dtype), p_new, params)
+    else:
+        params_out = jax.tree.map(
+            lambda np_, p: np_.astype(p.dtype), p_new, params)
+    return params_out, new_state, {"grad_norm": gnorm,
+                                   "lr": jnp.asarray(lr, F32)}

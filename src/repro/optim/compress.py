@@ -1,0 +1,58 @@
+"""Gradient compression codecs for the data-parallel reduction.
+
+Under GSPMD the gradient all-reduce/reduce-scatter happens in whatever dtype
+the gradient tensors carry, so casting inside the micro-batch accumulation
+loop directly shrinks the DP collective bytes:
+
+  * 'bf16'  — cast each microbatch gradient to bf16 before accumulation
+              (collective bytes ÷2 vs f32; standard practice)
+  * 'int8'  — per-tensor absmax-scaled int8 with stochastic rounding
+              (collective bytes ÷4; unbiased, accumulate in f32)
+
+The codec is applied by launch/train.py's accumulation scan; EXPERIMENTS
+§Perf measures the collective-term change on the dry-run HLO.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def encode(grads, method: str, key=None):
+    if method == "none":
+        return grads
+    if method == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    if method == "int8":
+        leaves, treedef = jax.tree.flatten(grads)
+        keys = jax.random.split(key, len(leaves)) if key is not None else \
+            [None] * len(leaves)
+        out = [_quantize_sr(g, k) for g, k in zip(leaves, keys)]
+        return jax.tree.unflatten(treedef, out)
+    raise ValueError(method)
+
+
+def decode(grads, method: str):
+    if method == "none":
+        return grads
+    if method == "bf16":
+        return jax.tree.map(lambda g: g.astype(F32), grads)
+    if method == "int8":
+        return jax.tree.map(
+            lambda t: t[0].astype(F32) * t[1],
+            grads, is_leaf=lambda x: isinstance(x, tuple))
+    raise ValueError(method)
+
+
+def _quantize_sr(g: jax.Array, key) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(F32))), 1e-12) / 127.0
+    x = g.astype(F32) / scale
+    if key is not None:
+        noise = jax.random.uniform(key, g.shape) - 0.5
+        x = x + noise
+    q = jnp.clip(jnp.round(x), -127, 127).astype(jnp.int8)
+    return q, scale

@@ -1,0 +1,25 @@
+"""LR schedules: linear warmup into cosine / linear / constant / wsd."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+
+F32 = jnp.float32
+
+
+def learning_rate(ocfg: OptimConfig, step) -> jnp.ndarray:
+    s = jnp.asarray(step, F32)
+    warm = jnp.asarray(max(ocfg.warmup_steps, 1), F32)
+    total = jnp.asarray(max(ocfg.total_steps, 1), F32)
+    frac = jnp.clip((s - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+    if ocfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    elif ocfg.schedule == "linear":
+        decay = 1.0 - frac
+    elif ocfg.schedule == "wsd":          # warmup-stable-decay (10% decay tail)
+        decay = jnp.where(frac < 0.9, 1.0, (1.0 - frac) / 0.1)
+    else:
+        decay = jnp.ones(())
+    warmup = jnp.clip(s / warm, 0.0, 1.0)
+    return ocfg.lr * warmup * decay

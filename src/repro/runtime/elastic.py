@@ -1,0 +1,36 @@
+"""Elastic scaling: change the device pool between checkpoints.
+
+Grow/shrink only touches the data axis (the model axis is fixed by memory
+constraints); because checkpoints are mesh-agnostic (full arrays + logical
+axes), rescaling = ``restore_resharded`` onto the new mesh + rebuilding the
+jitted step for the new batch sharding. Global batch stays constant — the
+per-device microbatch count changes — so training curves are unchanged
+modulo data-order (documented, matches common practice).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.reshard import restore_resharded
+
+
+def rescale(ckpt_dir: str, example_tree, axes_tree, new_mesh: Mesh,
+            step: Optional[int] = None) -> Tuple[Any, dict]:
+    """Restore latest checkpoint onto `new_mesh` (the whole elastic path)."""
+    return restore_resharded(ckpt_dir, example_tree, axes_tree, new_mesh,
+                             step=step)
+
+
+def plan_new_mesh(current_data: int, current_model: int,
+                  healthy_devices: int) -> Tuple[int, int]:
+    """Pick the largest data-axis size that fits the healthy pool while
+    keeping the model axis intact (power-of-two preference)."""
+    model = current_model
+    data = max(1, healthy_devices // model)
+    p = 1
+    while p * 2 <= data:
+        p *= 2
+    return p, model

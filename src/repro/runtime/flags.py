@@ -1,0 +1,16 @@
+"""Process-wide tracing flags.
+
+``UNROLL_SCANS`` — when True, every model/core lax.scan fully unrolls.
+Used ONLY by the dry-run's cost probes: XLA's HloCostAnalysis counts a
+while-loop body ONCE regardless of trip count, so FLOP/collective accounting
+needs loop-free HLO. Production lowering keeps scans rolled (compile time,
+code size); the dry-run fits cost = intercept + slope·repeats from two
+small unrolled probes and extrapolates to the full depth (launch/dryrun.py).
+"""
+
+UNROLL_SCANS: bool = False
+
+
+def scan_unroll():
+    """Pass as lax.scan(..., unroll=scan_unroll())."""
+    return True if UNROLL_SCANS else 1

@@ -1,0 +1,47 @@
+"""Straggler detection & mitigation hooks.
+
+On a real multi-pod deployment step-time skew comes from a slow host/chip;
+the SPMD program itself cannot proceed without every participant, so
+mitigation happens at the *supervision* layer: detect persistent outliers
+from per-step wall times and (a) exclude the slow host at the next elastic
+re-shard (runtime/elastic.py) or (b) pre-emptively checkpoint. This module
+implements the detection policy deterministically so it is fully testable
+on CPU; tests feed synthetic timing traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    window: int = 20              # sliding window of per-step durations
+    threshold: float = 2.0        # flag if > threshold × median
+    patience: int = 3             # consecutive flags before action
+    _hist: List[float] = dataclasses.field(default_factory=list)
+    _flags: int = 0
+    actions: List[Dict] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, duration_s: float,
+                host: Optional[int] = None) -> Optional[str]:
+        """Record a step duration; returns an action string when triggered."""
+        self._hist.append(duration_s)
+        if len(self._hist) > self.window:
+            self._hist.pop(0)
+        if len(self._hist) < max(5, self.window // 2):
+            return None
+        med = statistics.median(self._hist[:-1])
+        if med > 0 and duration_s > self.threshold * med:
+            self._flags += 1
+        else:
+            self._flags = 0
+        if self._flags >= self.patience:
+            self._flags = 0
+            action = {"kind": "straggler", "step": step, "host": host,
+                      "duration": duration_s, "median": med,
+                      "action": "exclude_on_next_reshard"}
+            self.actions.append(action)
+            return action["action"]
+        return None

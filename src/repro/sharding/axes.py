@@ -1,0 +1,278 @@
+"""Logical-axis sharding.
+
+Params and activations are annotated with *logical* axis names; a rules table
+maps each logical name to a priority list of mesh axes. Resolution is
+divisibility-aware: the first candidate mesh axis (or axis tuple) whose size
+divides the dimension AND is not already used by another dim of the same
+tensor wins; otherwise the dim is replicated. This lets one rules table serve
+all ten architectures (e.g. qwen2-7b's 28 heads don't divide a 16-way model
+axis → heads fall back to replicated while its 18944-wide MLP shards cleanly).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...]]
+# logical axis name -> priority list of mesh-axis candidates
+AxisRules = Tuple[Tuple[str, Tuple[MeshAxes, ...]], ...]
+
+# --------------------------------------------------------------------------
+# Default rules (see DESIGN.md §6). 'fsdp' below refers to the data axis —
+# ZeRO-3-style parameter sharding via GSPMD; across pods params stay
+# pod-replicated (DCN gathers are too slow for per-layer weight gathers).
+# --------------------------------------------------------------------------
+
+DEFAULT_PARAM_RULES: AxisRules = (
+    ("vocab", (("model",), ("data", "pod"), ("data",))),
+    ("embed", (("data", "pod"), ("data",))),  # FSDP dim of every weight
+    ("embed_tp", (("model",),)),           # row-parallel input dim (down-proj)
+    ("heads", (("model",),)),
+    ("kv_heads", (("model",),)),
+    ("head_dim", ()),
+    ("mlp", (("model",),)),
+    ("experts", (("model",),)),            # expert parallelism
+    ("expert_mlp", ()),
+    ("expert_embed", (("data", "pod"), ("data",))),  # FSDP inside experts
+    ("dinner", (("model",),)),             # mamba d_inner / conv channels
+    ("ssm_heads", (("model",),)),
+    ("state", ()),
+    ("conv", ()),
+    ("layers", ()),                        # scan-stacked dim, never sharded
+    ("frontend", ()),
+    ("norm", ()),
+)
+
+DEFAULT_ACT_RULES: AxisRules = (
+    ("layers", ()),                        # stacked caches carry this dim
+    ("act_batch", (("pod", "data"), ("data",), ("pod",))),
+    ("act_seq", (("data",), ("model",))),  # sequence parallel (long context)
+    ("act_kv_seq", (("data",), ("model",))),
+    ("act_heads", (("model",),)),
+    ("act_kv_heads", (("model",),)),
+    ("act_embed", ()),
+    ("act_mlp", (("model",),)),
+    ("act_experts", (("model",),)),
+    ("act_vocab", (("model",), ("data",))),
+    ("act_head_dim", ()),
+    ("act_state", ()),
+    ("act_expert_embed", (("data",),)),
+)
+
+
+# --------------------------------------------------------------------------
+# Profiles (hillclimb, EXPERIMENTS §Perf): 'default' = FSDP+TP;
+# 'dp_only' = pure data parallelism with the model axis joining the batch —
+# the right shape for small models where TP only replicates work.
+# --------------------------------------------------------------------------
+
+DP_ONLY_PARAM_RULES: AxisRules = tuple(
+    (name, ((("data", "pod"), ("data",)) if name in
+            ("embed", "expert_embed", "vocab") else ()))
+    for name, _ in DEFAULT_PARAM_RULES)
+
+DP_ONLY_ACT_RULES: AxisRules = (
+    ("layers", ()),
+    ("act_batch", (("pod", "data", "model"), ("data", "model"),
+                   ("pod", "data"), ("data",))),
+    ("act_seq", ()),
+    ("act_kv_seq", (("data",), ("model",))),
+    ("act_heads", ()),
+    ("act_kv_heads", ()),
+    ("act_embed", ()),
+    ("act_mlp", ()),
+    ("act_experts", ()),
+    ("act_vocab", ()),
+    ("act_head_dim", ()),
+    ("act_state", ()),
+    ("act_expert_embed", ()),
+)
+
+_PROFILES = {
+    "default": None,  # filled after DEFAULT_ACT_RULES is defined below
+    "dp_only": (DP_ONLY_PARAM_RULES, DP_ONLY_ACT_RULES),
+}
+_CURRENT = ["default"]
+
+
+def use_profile(name: str) -> None:
+    assert name in _PROFILES, name
+    _CURRENT[0] = name
+
+
+def current_profile() -> str:
+    return _CURRENT[0]
+
+
+def current_param_rules() -> AxisRules:
+    if _CURRENT[0] == "default":
+        return DEFAULT_PARAM_RULES
+    return _PROFILES[_CURRENT[0]][0]
+
+
+def current_act_rules() -> AxisRules:
+    if _CURRENT[0] == "default":
+        return DEFAULT_ACT_RULES
+    return _PROFILES[_CURRENT[0]][1]
+
+
+def _axes_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _axes_tuple(axes: MeshAxes) -> Tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def resolve_spec(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[AxisRules] = None,
+) -> P:
+    """Map per-dim logical names to a PartitionSpec, divisibility-aware.
+    rules=None → the current profile's param rules (late-bound)."""
+    if rules is None:
+        rules = current_param_rules()
+    assert len(logical) == len(shape), (logical, shape)
+    table: Dict[str, Tuple[MeshAxes, ...]] = dict(rules)
+    used: set = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        choice: Optional[MeshAxes] = None
+        if name is not None:
+            if name not in table:
+                raise KeyError(f"no sharding rule for logical axis {name!r}")
+            for cand in table[name]:
+                cand_t = _axes_tuple(cand)
+                if not all(a in mesh.shape for a in cand_t):
+                    continue
+                if any(a in used for a in cand_t):
+                    continue
+                if dim % _axes_size(mesh, cand) == 0 and _axes_size(mesh, cand) > 1:
+                    choice = cand_t if len(cand_t) > 1 else cand_t[0]
+                    used.update(cand_t)
+                    break
+        out.append(choice)
+    # trim trailing Nones for a tidy spec
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(
+    mesh: Mesh,
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    rules: Optional[AxisRules] = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(logical, shape, mesh, rules))
+
+
+def tree_pspecs(
+    axes_tree: Any,
+    shaped_tree: Any,
+    mesh: Mesh,
+    rules: Optional[AxisRules] = None,
+) -> Any:
+    """Pytree of PartitionSpec from parallel trees of logical axes & shapes."""
+    if rules is None:
+        rules = current_param_rules()
+    return jax.tree.map(
+        lambda ax, leaf: resolve_spec(ax, leaf.shape, mesh, rules),
+        axes_tree, shaped_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def tree_shardings(axes_tree, shaped_tree, mesh, rules=None):
+    if rules is None:
+        rules = current_param_rules()
+    specs = tree_pspecs(axes_tree, shaped_tree, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x: jax.Array, mesh: Mesh, *logical: Optional[str],
+              rules: Optional[AxisRules] = None) -> jax.Array:
+    """with_sharding_constraint by logical activation axis names
+    (rules=None → the current profile's act rules)."""
+    if mesh is None or mesh.empty or math.prod(mesh.shape.values()) == 1:
+        return x
+    if rules is None:
+        rules = current_act_rules()
+    spec = resolve_spec(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Param builder: single code path yields params AND their logical axes
+# --------------------------------------------------------------------------
+
+
+class ParamBuilder:
+    """Creates params while recording logical axes.
+
+    ``abstract=True`` creates ShapeDtypeStructs (no allocation) — used by the
+    dry-run to derive shardings and by eval_shape-style accounting.
+    """
+
+    def __init__(self, key: Optional[jax.Array], dtype: str = "float32",
+                 abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract
+        self.axes: Dict[str, Any] = {}
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, name: str, shape: Tuple[int, ...],
+              axes: Tuple[Optional[str], ...], init: str = "normal",
+              scale: Optional[float] = None, dtype: Optional[str] = None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        dt = jnp.dtype(dtype or self.dtype)
+        self.axes[name] = tuple(axes)
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        if init == "zeros":
+            return jnp.zeros(shape, dt)
+        if init == "ones":
+            return jnp.ones(shape, dt)
+        if init == "normal":
+            if scale is None:
+                fan_in = shape[0] if len(shape) > 1 else max(shape[-1], 1)
+                scale = 1.0 / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(self._next_key(), shape) * scale).astype(dt)
+        if init == "uniform":
+            return jax.random.uniform(
+                self._next_key(), shape, minval=-(scale or 1.0),
+                maxval=(scale or 1.0)).astype(dt)
+        raise ValueError(init)
+
+    def custom(self, name: str, value, axes: Tuple[Optional[str], ...]):
+        """Register a custom-initialized param (e.g. A_log, dt_bias)."""
+        self.axes[name] = tuple(axes)
+        if self.abstract:
+            return jax.ShapeDtypeStruct(value.shape, value.dtype)
+        return value
+
+
+def unflatten_axes(flat: Dict[str, Any]) -> Dict[str, Any]:
+    """{'a/b/c': axes} -> nested {'a': {'b': {'c': axes}}}."""
+    out: Dict[str, Any] = {}
+    for path, axes in flat.items():
+        node = out
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = axes
+    return out

@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_cover_instance(n=256, universe=512, seed=0):
+    from repro.data import synthetic
+    sets = synthetic.gen_kcover(n, universe, seed=seed)
+    return sets, synthetic.pack_bitmaps(sets, universe)
+
+
+def make_points(n=200, d=16, seed=0):
+    from repro.data import synthetic
+    return synthetic.gen_images(n, d, classes=8, seed=seed)

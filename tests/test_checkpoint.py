@@ -1,0 +1,106 @@
+"""Checkpointing, fault tolerance (failure injection → restore → complete),
+and elastic resharding."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager
+from repro.checkpoint.reshard import restore_resharded
+from repro.launch.mesh import make_local_mesh
+from repro.runtime.fault import FailureInjector, Supervisor, WorkerFailure
+from repro.runtime.straggler import StragglerMonitor
+
+
+def _tree(x=0.0):
+    return {"a": jnp.full((4, 3), x), "b": {"c": jnp.arange(5) + int(x)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    manager.save(d, 7, _tree(2.5), extra={"note": "hi"})
+    tree, manifest = manager.restore(d, _tree())
+    np.testing.assert_allclose(np.asarray(tree["a"]), 2.5)
+    assert manifest["step"] == 7 and manifest["extra"]["note"] == "hi"
+
+
+def test_keep_n_cleanup(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in range(6):
+        manager.save(d, s, _tree(s), keep=3)
+    assert manager.list_steps(d) == [3, 4, 5]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    manager.save(d, 1, _tree())
+    bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.arange(5)}}
+    with pytest.raises(ValueError):
+        manager.restore(d, bad)
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    d = str(tmp_path / "ck")
+    manager.save(d, 1, _tree())
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+
+def test_supervisor_recovers_from_injected_failures(tmp_path):
+    """Train 40 steps with failures at 12 & 25: supervisor restores from
+    the latest checkpoint and completes all steps."""
+    d = str(tmp_path / "ck")
+    sup = Supervisor(ckpt_dir=d, ckpt_every=10,
+                     injector=FailureInjector((12, 25)))
+    calls = []
+
+    def step_fn(state, step):
+        calls.append(step)
+        return {"x": state["x"] + 1}, {"loss": 1.0}
+
+    state, final = sup.run({"x": jnp.zeros(())}, step_fn, 40)
+    assert final == 40
+    kinds = [e["kind"] for e in sup.events]
+    assert kinds.count("failure") == 2
+    assert kinds.count("restart") == 2
+    # replayed from step 10 and 20 respectively
+    assert calls.count(11) >= 2
+    assert float(state["x"]) == 40  # state consistent with 40 applied steps
+
+
+def test_supervisor_failure_before_first_checkpoint_raises(tmp_path):
+    sup = Supervisor(ckpt_dir=str(tmp_path / "ck"), ckpt_every=10,
+                     injector=FailureInjector((2,)), max_restarts=1)
+    with pytest.raises(RuntimeError):
+        sup.run({"x": jnp.zeros(())},
+                lambda s, i: ({"x": s["x"] + 1}, {}), 20)
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Checkpoint written unsharded restores onto a (1-device) mesh with
+    NamedShardings resolved from logical axes — the elastic path."""
+    d = str(tmp_path / "ck")
+    tree = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
+    axes = {"w": ("embed", "mlp")}
+    manager.save(d, 3, tree)
+    mesh = make_local_mesh(1, 1)
+    restored, manifest = restore_resharded(d, tree, axes, mesh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert manifest["step"] == 3
+
+
+def test_straggler_monitor_flags_persistent_outlier():
+    mon = StragglerMonitor(window=10, threshold=2.0, patience=3)
+    actions = []
+    for step in range(30):
+        dur = 1.0 if step < 20 else 5.0  # persistent 5× slowdown
+        a = mon.observe(step, dur, host=3)
+        if a:
+            actions.append((step, a))
+    assert actions and actions[0][1] == "exclude_on_next_reshard"
+    # transient spikes do NOT trigger
+    mon2 = StragglerMonitor(window=10, threshold=2.0, patience=3)
+    trig = [mon2.observe(s, 5.0 if s % 7 == 0 else 1.0) for s in range(40)]
+    assert not any(trig)

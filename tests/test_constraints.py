@@ -1,0 +1,97 @@
+"""Matroid constraints (paper §7 future work): Greedy under partition
+matroids — capacity respect, heredity, 1/2·OPT bound vs brute force."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.constraints import PartitionMatroid, uniform_matroid
+from repro.core.functions import make_objective
+from repro.core.greedy import greedy
+from repro.data.synthetic import gen_kcover, pack_bitmaps
+
+
+def _cover(n, universe, seed):
+    sets = gen_kcover(n, universe, seed=seed)
+    return sets, jnp.asarray(pack_bitmaps(sets, universe))
+
+
+@given(seed=st.integers(0, 5000))
+@settings(max_examples=20, deadline=None)
+def test_partition_matroid_capacities_respected(seed):
+    n, u = 24, 64
+    _, bm = _cover(n, u, seed)
+    cats = jnp.asarray(np.arange(n) % 3, jnp.int32)
+    caps = jnp.asarray([2, 1, 3], jnp.int32)
+    obj = make_objective("kcover", universe=u)
+    sol = greedy(obj, jnp.arange(n, dtype=jnp.int32), bm,
+                 jnp.ones(n, bool), k=10,
+                 constraint=PartitionMatroid(cats, caps))
+    sel = np.asarray(sol.ids)[np.asarray(sol.valid)]
+    counts = np.bincount(np.asarray(cats)[sel], minlength=3)
+    assert np.all(counts <= np.asarray(caps)), (counts, sel)
+
+
+def test_uniform_matroid_equals_cardinality():
+    n, u, k = 32, 128, 6
+    _, bm = _cover(n, u, 3)
+    obj = make_objective("kcover", universe=u)
+    plain = greedy(obj, jnp.arange(n, dtype=jnp.int32), bm,
+                   jnp.ones(n, bool), k)
+    mat = greedy(obj, jnp.arange(n, dtype=jnp.int32), bm,
+                 jnp.ones(n, bool), k, constraint=uniform_matroid(n, k))
+    assert float(plain.value) == float(mat.value)
+    np.testing.assert_array_equal(np.asarray(plain.ids),
+                                  np.asarray(mat.ids))
+
+
+def _brute_force_matroid_opt(sets, universe, cats, caps, kmax):
+    n = len(sets)
+    best = 0
+    for r in range(1, kmax + 1):
+        for combo in itertools.combinations(range(n), r):
+            counts = np.bincount(cats[list(combo)], minlength=len(caps))
+            if np.any(counts > caps):
+                continue
+            cov = set()
+            for e in combo:
+                cov.update(sets[e].tolist())
+            best = max(best, len(cov))
+    return best
+
+
+@given(seed=st.integers(0, 2000))
+@settings(max_examples=10, deadline=None)
+def test_greedy_matroid_half_opt_bound(seed):
+    """Greedy is 1/2-approximate under matroid constraints (Fisher et al.)."""
+    n, u = 9, 40
+    sets, bm = _cover(n, u, seed)
+    cats = np.arange(n) % 2
+    caps = np.asarray([2, 1])
+    opt = _brute_force_matroid_opt(sets, u, cats, caps, kmax=3)
+    obj = make_objective("kcover", universe=u)
+    sol = greedy(obj, jnp.arange(n, dtype=jnp.int32), bm,
+                 jnp.ones(n, bool), k=3,
+                 constraint=PartitionMatroid(
+                     jnp.asarray(cats, jnp.int32),
+                     jnp.asarray(caps, jnp.int32)))
+    assert float(sol.value) >= 0.5 * opt - 1e-6
+
+
+def test_matroid_composes_with_stochastic_sampling():
+    n, u = 64, 256
+    _, bm = _cover(n, u, 5)
+    cats = jnp.asarray(np.arange(n) % 4, jnp.int32)
+    caps = jnp.asarray([3, 3, 3, 3], jnp.int32)
+    obj = make_objective("kcover", universe=u)
+    sol = greedy(obj, jnp.arange(n, dtype=jnp.int32), bm,
+                 jnp.ones(n, bool), k=12, sample=16,
+                 key=jax.random.PRNGKey(2),
+                 constraint=PartitionMatroid(cats, caps))
+    sel = np.asarray(sol.ids)[np.asarray(sol.valid)]
+    counts = np.bincount(np.asarray(cats)[sel], minlength=4)
+    assert np.all(counts <= np.asarray(caps))
+    assert float(sol.value) > 0

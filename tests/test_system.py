@@ -1,0 +1,146 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's central empirical claims, verified at laptop scale:
+  1. GreedyML quality ≈ RandGreedi quality (≪1% gap in the paper).
+  2. GreedyML interior nodes do strictly less work than RandGreedi's single
+     accumulation node (the compute/memory bottleneck claim).
+  3. Deeper trees shrink the max accumulation-node size (the memory claim).
+  4. The full train driver works end-to-end with GreedyML data selection,
+     checkpoint/restart, and an injected failure.
+"""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import OptimConfig, ShapeConfig, TrainConfig
+from repro.core.simulate import run_tree_dense, run_tree_lazy
+from repro.core.tree import AccumulationTree, randgreedi_tree
+from repro.data import pipeline, selection, synthetic
+from repro.launch import steps
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+
+
+@pytest.fixture(scope="module")
+def cover():
+    sets = synthetic.gen_kcover(1024, 4096, seed=9)
+    return sets, synthetic.pack_bitmaps(sets, 4096)
+
+
+def test_greedyml_quality_matches_randgreedi(cover):
+    """Paper §6.1: GreedyML within a few % of RandGreedi across trees."""
+    _, bm = cover
+    k = 24
+    rg = run_tree_dense("kcover", bm, k, randgreedi_tree(8), seed=1,
+                        universe=4096)
+    for b in (2, 4):
+        ml = run_tree_dense("kcover", bm, k, AccumulationTree(8, b), seed=1,
+                            universe=4096)
+        assert ml.value >= 0.95 * rg.value, (b, ml.value, rg.value)
+
+
+def test_interior_node_work_shrinks_with_depth(cover):
+    """Paper §6.1/Fig.4: RandGreedi's single accumulation node evaluates a
+    m·k-element pool; GreedyML nodes only b·k."""
+    sets, _ = cover
+    k = 64
+    rg = run_tree_lazy("kcover", sets, k, randgreedi_tree(16), seed=2,
+                       universe=4096)
+    ml = run_tree_lazy("kcover", sets, k, AccumulationTree(16, 2), seed=2,
+                       universe=4096)
+    rg_interior = max(v for (lvl, _), v in rg.per_node_evals.items()
+                      if lvl > 0)
+    ml_interior = max(v for (lvl, _), v in ml.per_node_evals.items()
+                      if lvl > 0)
+    assert ml_interior < rg_interior
+
+
+def test_memory_claim_max_node_elements():
+    """Paper §6.2: max elements on one machine drops m·k → b·k."""
+    cm_rg = randgreedi_tree(32).cost_model(10_000, 1000, 8.0)
+    cm_ml = AccumulationTree(32, 2).cost_model(10_000, 1000, 8.0)
+    assert cm_rg["elements_per_interior"] == 32 * 1000
+    assert cm_ml["elements_per_interior"] == 2 * 1000
+
+
+def test_train_driver_end_to_end(tmp_path):
+    """corpus → GreedyML selection → train → ckpt → injected failure →
+    recovery → completion."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "smollm-135m", "--smoke", "--steps", "30",
+         "--ckpt-every", "10", "--fail-at", "15",
+         "--data-selection", "greedyml:facility",
+         "--selection-k", "64", "--corpus-docs", "128",
+         "--ckpt-dir", str(tmp_path / "ck")],
+        capture_output=True, text=True, timeout=900, env=ENV,
+        cwd="/root/repo")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "kept 64 of 128" in proc.stdout
+    assert "done at step 30" in proc.stdout
+    assert "'failure', 'restart'" in proc.stdout
+
+
+def test_serve_driver_end_to_end():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--arch", "smollm-135m", "--smoke", "--prompt-len", "32",
+         "--gen", "8", "--batch", "2"],
+        capture_output=True, text=True, timeout=900, env=ENV,
+        cwd="/root/repo")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "prefill" in proc.stdout and "tok/s" in proc.stdout
+
+
+def test_summarize_driver_compare():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.summarize",
+         "--problem", "paper-kcover", "--machines", "4", "--branching", "2",
+         "--k", "16", "--engine", "lazy", "--compare"],
+        capture_output=True, text=True, timeout=900, env=ENV,
+        cwd="/root/repo")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "GreedyML" in proc.stdout and "RandGreedi" in proc.stdout
+
+
+def test_training_with_selected_coreset_converges():
+    cfg = registry.smoke_config("smollm-135m")
+    toks = synthetic.gen_tokens(64, 33, cfg.vocab_size, seed=0)
+    emb = selection.embed_documents(toks[:, :32], seed=0)
+    sel = selection.select_coreset(emb, 16, spec="greedyml:facility",
+                                   machines=4, branching=2)
+    ds = pipeline.TokenDataset(toks, seed=0, selected=sel)
+    shape = ShapeConfig("t", "train", 32, 8)
+    ocfg = OptimConfig(lr=3e-3, warmup_steps=3, total_steps=60,
+                       schedule="constant", weight_decay=0.0)
+    state, _ = steps.concrete_state(jax.random.PRNGKey(0), cfg, ocfg)
+    fn = jax.jit(steps.make_train_step(cfg, ocfg, TrainConfig(), shape, None),
+                 donate_argnums=0)
+    losses = []
+    for step in range(40):
+        state, metr = fn(state, pipeline.place(ds.batch(step, 8), None))
+        losses.append(float(metr["loss"]))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_adafactor_trains_too():
+    cfg = registry.smoke_config("smollm-135m")
+    shape = ShapeConfig("t", "train", 32, 4)
+    ocfg = OptimConfig(name="adafactor", lr=1e-2, warmup_steps=3,
+                       total_steps=60, schedule="constant")
+    state, _ = steps.concrete_state(jax.random.PRNGKey(0), cfg, ocfg)
+    fn = jax.jit(steps.make_train_step(cfg, ocfg, TrainConfig(), shape, None),
+                 donate_argnums=0)
+    from repro.models import api
+    batch = api.synth_batch(jax.random.PRNGKey(1), cfg, shape)
+    batch["labels"] = batch["tokens"]
+    losses = []
+    for _ in range(40):
+        state, metr = fn(state, batch)
+        losses.append(float(metr["loss"]))
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
