@@ -47,6 +47,37 @@ def main(full: bool = False):
     for r in rows:
         print(f"{r['augment']},{r['L']},{r['b']},{r['rel_value_pct']:.2f},"
               f"{r['speedup']:.2f},{r['crit_evals']},{r['rg_crit_evals']}")
+    # headline single-node engine comparison (ISSUE 1 acceptance config:
+    # N=4096, C=4096, D=256, k=32, interpret backend). Read from the last
+    # bench_selection run rather than re-measuring — run.py times this
+    # function wall-clock for the Table-4 us_per_call metric.
+    import json
+    import os
+
+    from benchmarks import bench_selection
+    # non --full runs park results in *_small.json; prefer it only when it
+    # is actually fresher than the checked-in headline artifact
+    small = bench_selection.OUT_PATH.replace(".json", "_small.json")
+    headline = bench_selection.OUT_PATH
+    path = headline
+    if (not full and os.path.exists(small)
+            and (not os.path.exists(headline)
+                 or os.path.getmtime(small) >= os.path.getmtime(headline))):
+        path = small
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                res = json.load(f)
+            r = res["objectives"]["kmedoid"]["interpret"]
+            cfg = res["config"]
+            print(f"fused_engine@N={cfg['n']},k={cfg['k']} "
+                  f"({os.path.basename(path)}): "
+                  f"{r['speedup']}x (step {r['wall_step_s']}s -> fused "
+                  f"{r['wall_fused_s']}s, calls {r['kernel_calls_step']} "
+                  f"-> {r['kernel_calls_fused']})")
+        except (KeyError, ValueError) as e:   # stale/drifted artifact
+            print(f"fused_engine: unreadable {os.path.basename(path)} "
+                  f"({e!r}); rerun benchmarks.bench_selection")
     return rows
 
 

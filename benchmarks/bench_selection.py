@@ -1,0 +1,156 @@
+"""Selection-engine perf: fused cached-matrix greedy vs per-step reference.
+
+Tracks the perf trajectory of the DESIGN §Perf selection engine from the PR
+that introduced it onward, emitting ``benchmarks/BENCH_selection.json``
+with per-objective step time, gains-kernel effective GB/s, evals/s, and the
+kernel-call/FLOP model.
+
+Two backends are measured:
+
+  * 'interpret' — Pallas interpret mode. Faithful to the TPU execution
+    model: each per-step gains kernel REBUILDS the O(N·C·D) matrix (no
+    cross-kernel loop-invariant code motion is possible through a
+    pallas_call), so the fused engine's k·NCD → NCD + k·NC reduction shows
+    up directly in wall time. This is the acceptance metric.
+  * 'ref' — pure-jnp under jit. XLA hoists the loop-invariant distance
+    matmul out of the selection scan on its own, so ref wall time is the
+    CPU floor for BOTH engines (≈1×) — recorded to keep ourselves honest
+    about where the win comes from.
+
+Headline configuration (full): N=4096, C=4096, D=256, k=32 (ISSUE 1).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.functions import make_objective
+from repro.core.greedy import greedy
+from repro.data.synthetic import gen_images, gen_kcover, pack_bitmaps
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_selection.json")
+
+HEADLINE = dict(n=4096, d=256, k=32)          # acceptance config (C = N)
+SMALL = dict(n=1024, d=256, k=16)
+
+
+def _time_greedy(obj, ids, pay, valid, k, engine, reps=1):
+    fn = jax.jit(lambda i, p, v: greedy(obj, i, p, v, k, engine=engine))
+    sol = fn(ids, pay, valid)
+    jax.block_until_ready(sol.ids)            # compile + warmup
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        sol = fn(ids, pay, valid)
+        jax.block_until_ready(sol.ids)
+        best = min(best, time.time() - t0)
+    return best, sol
+
+
+def _vector_objective_rows(name, n, d, k, backends):
+    x = jnp.asarray(gen_images(n, d, classes=16, seed=0))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    valid = jnp.ones(n, bool)
+    out = {}
+    for backend in backends:
+        obj = make_objective(name, backend=backend)
+        t_step, sol_s = _time_greedy(obj, ids, x, valid, k, "step")
+        t_fused, sol_f = _time_greedy(obj, ids, x, valid, k, "fused")
+        assert (sol_s.ids == sol_f.ids).all(), "engines must agree"
+        evals = int(sol_f.evals)
+        out[backend] = dict(
+            wall_step_s=round(t_step, 4),
+            wall_fused_s=round(t_fused, 4),
+            speedup=round(t_step / max(t_fused, 1e-9), 2),
+            step_time_fused_ms=round(t_fused / k * 1e3, 3),
+            # per step the fused engine re-reads the cached (N, C) matrix;
+            # C = N here, and the denominator includes the one-time prepare
+            gains_gbps=round(k * n * n * 4 / max(t_fused, 1e-9) / 1e9, 2),
+            evals_per_s=round(evals / max(t_fused, 1e-9), 1),
+            kernel_calls_step=3 * k,          # gains + update + replay-pass
+            kernel_calls_fused=k + 1,         # prepare + k fused steps
+        )
+    return out
+
+
+def _coverage_row(n, universe, k):
+    from repro.kernels import ops
+    bm = jnp.asarray(pack_bitmaps(gen_kcover(n, universe, seed=0),
+                                  universe))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    obj = make_objective("kcover", universe=universe)
+    t_step, sol = _time_greedy(obj, ids, bm, jnp.ones(n, bool), k, "step")
+    return {ops._backend(None): dict(
+        wall_step_s=round(t_step, 4),
+        step_time_ms=round(t_step / k * 1e3, 3),
+        evals_per_s=round(int(sol.evals) / max(t_step, 1e-9), 1),
+        note="no cacheable matrix; per-step engine on both paths")}
+
+
+def flop_model(n, c, d, k):
+    """Analytic gains-term FLOPs per greedy invocation (ISSUE 1)."""
+    step = k * (2 * n * c * d + 3 * n * c) + k * 2 * n * d   # gains + update
+    fused = 2 * n * c * d + k * 3 * n * c                     # prepare + steps
+    return dict(n=n, c=c, d=d, k=k, step_flops=step, fused_flops=fused,
+                speedup=round(step / fused, 2))
+
+
+def run(full: bool = False):
+    cfg = HEADLINE if full else SMALL
+    n, d, k = cfg["n"], cfg["d"], cfg["k"]
+    results = dict(
+        config=dict(n=n, c=n, d=d, k=k, full=full,
+                    device=jax.default_backend()),
+        objectives={
+            "kmedoid": _vector_objective_rows("kmedoid", n, d, k,
+                                              ("interpret", "ref")),
+            "facility": _vector_objective_rows("facility", n, d, k,
+                                               ("interpret", "ref")),
+            "coverage": _coverage_row(min(n, 4096), min(n, 4096), k),
+        },
+        flop_model_headline=flop_model(HEADLINE["n"], HEADLINE["n"],
+                                       HEADLINE["d"], HEADLINE["k"]),
+    )
+    out_path = OUT_PATH
+    if not full and os.path.exists(OUT_PATH):
+        try:
+            with open(OUT_PATH) as f:
+                existing_full = bool(json.load(f)["config"]["full"])
+        except (KeyError, ValueError):
+            existing_full = False
+        if existing_full:
+            # never clobber the checked-in headline (--full) artifact with
+            # small-config numbers; park them next to it instead
+            out_path = OUT_PATH.replace(".json", "_small.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    return results, out_path
+
+
+def main(full: bool = False):
+    res, out_path = run(full)
+    rows = []
+    print("objective,backend,wall_step_s,wall_fused_s,speedup,gains_gbps")
+    for name, per_backend in res["objectives"].items():
+        for backend, r in per_backend.items():
+            rows.append(dict(objective=name, backend=backend, **r))
+            print(f"{name},{backend},{r.get('wall_step_s', '')},"
+                  f"{r.get('wall_fused_s', '')},{r.get('speedup', '')},"
+                  f"{r.get('gains_gbps', '')}")
+    fm = res["flop_model_headline"]
+    print(f"flop_model@N={fm['n']},C={fm['c']},D={fm['d']},k={fm['k']}: "
+          f"{fm['speedup']}x ({fm['step_flops']:.3g} -> "
+          f"{fm['fused_flops']:.3g} flops)")
+    print(f"wrote {out_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(ap.parse_args().full)

@@ -17,7 +17,7 @@ sys.path.insert(0, os.path.dirname(__file__) + "/..")
 
 from benchmarks import (bench_complexity, bench_kmedoid, bench_memory_k,
                         bench_memory_limits, bench_quality, bench_scaling,
-                        bench_tree_params)
+                        bench_selection, bench_tree_params)
 from benchmarks.common import csv_row
 
 
@@ -32,6 +32,9 @@ def main() -> None:
         "memory_k(fig5)": lambda: bench_memory_k.main(args.full),
         "memory_limits(tab3)": lambda: bench_memory_limits.main(args.full),
         "scaling(fig6)": lambda: bench_scaling.main(args.full),
+        # fused selection engine trajectory — writes BENCH_selection.json;
+        # runs before kmedoid(tab4) so its headline line reads THIS run
+        "selection(perf)": lambda: bench_selection.main(args.full),
         "kmedoid(tab4)": lambda: bench_kmedoid.main(args.full),
         "complexity(tab1)": lambda: bench_complexity.main(args.full),
         "quality(sec6)": lambda: bench_quality.main(args.full),

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CPU smoke job: tier-1 suite on the default (ref) backend, then the
+# kernel + fused-selection tests again under Pallas interpret mode so the
+# actual kernel bodies (not just the jnp oracles) are exercised on CPU.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 (ref backend) =="
+python -m pytest -x -q
+
+echo "== kernel tests (REPRO_KERNEL_BACKEND=interpret) =="
+REPRO_KERNEL_BACKEND=interpret python -m pytest -q \
+    tests/test_kernels.py tests/test_fused_selection.py
+
+echo "CI smoke OK"

@@ -14,6 +14,22 @@ Interface (all methods jit-safe, fixed shapes):
   update(state, payload)           → state after adding one element
   value(state)                     → f(S) under this node's evaluation set
 
+Fused selection engine (optional, DESIGN §Perf) — precompute-once /
+reduce-per-step instead of recompute-everything-per-step:
+  prepare(state, cands, cand_valid) → cache | None
+      One-time O(N·C·D) cached ground×candidate matrix; None when the
+      objective has no cacheable structure (coverage) or the matrix
+      exceeds the memory budget (ops.fused_plan) — callers then fall
+      back to the per-step gains/update path.
+  fused_step(state, cache, cand_mask, prev) → (state, best, gain)
+      One selection step: deferred prev-winner column update + masked
+      gains + on-chip argmax, all over the cached matrix (O(N·C)).
+  flush_pending(state, cache, prev) → state
+      Fold the final accepted winner's column after the scan.
+  replay_batch(state, payloads, valid) → state
+      All k solution elements folded into a fresh state in ONE pairwise
+      kernel call (replaces the sequential k-step update scan).
+
 For k-medoid/facility the evaluation ground set is the node's local data
 (paper §6.4 'local objective'); internal tree nodes therefore rebuild state
 over the union of child solutions (optionally + augment images).
@@ -74,6 +90,19 @@ class Coverage:
     def value(self, state: CoverageState):
         return state.total
 
+    def prepare(self, state, cands, cand_valid):
+        # Coverage gains depend non-linearly on the covered bitmap — there
+        # is no cacheable ground×candidate matrix; keep the per-step path.
+        return None
+
+    def replay_batch(self, state: CoverageState, payloads, valid
+                     ) -> CoverageState:
+        masked = jnp.where(valid[:, None], payloads,
+                           jnp.zeros_like(payloads))
+        union = jax.lax.reduce(masked, jnp.uint32(0),
+                               jax.lax.bitwise_or, [0])
+        return self.update(state, union)   # one OR'd bitmap = one element
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -126,6 +155,31 @@ class KMedoid:
     def value(self, state: MedoidState):
         return state.base - jnp.sum(state.mind) / state.n_eff
 
+    def prepare(self, state: MedoidState, cands, cand_valid):
+        if ops.fused_plan(state.ground.shape[0], cands.shape[0],
+                          backend=self.backend) is None:
+            return None                       # memory-capped: per-step path
+        return ops.pairwise_matrix(state.ground, cands, mode="dist",
+                                   backend=self.backend)
+
+    def fused_step(self, state: MedoidState, cache, cand_mask, prev):
+        mind, best, gain = ops.fused_step(cache, state.mind, cand_mask,
+                                          prev, mode="min",
+                                          backend=self.backend)
+        return (dataclasses.replace(state, mind=mind), best,
+                gain / state.n_eff)
+
+    def flush_pending(self, state: MedoidState, cache, prev) -> MedoidState:
+        mind = ops.apply_column(cache, state.mind, prev, mode="min")
+        return dataclasses.replace(state, mind=mind)
+
+    def replay_batch(self, state: MedoidState, payloads, valid
+                     ) -> MedoidState:
+        mat = ops.pairwise_matrix(state.ground, payloads, mode="dist",
+                                  backend=self.backend)
+        mind = ops.masked_col_reduce(mat, valid, state.mind, mode="min")
+        return dataclasses.replace(state, mind=mind)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -170,6 +224,32 @@ class FacilityLocation:
     def value(self, state: FacilityState):
         valid = state.curmax < 1.0e38
         return jnp.sum(jnp.where(valid, state.curmax, 0.0)) / state.n_eff
+
+    def prepare(self, state: FacilityState, cands, cand_valid):
+        if ops.fused_plan(state.ground.shape[0], cands.shape[0],
+                          backend=self.backend) is None:
+            return None                       # memory-capped: per-step path
+        return ops.pairwise_matrix(state.ground, cands, mode="dot",
+                                   backend=self.backend)
+
+    def fused_step(self, state: FacilityState, cache, cand_mask, prev):
+        curmax, best, gain = ops.fused_step(cache, state.curmax, cand_mask,
+                                            prev, mode="max",
+                                            backend=self.backend)
+        return (dataclasses.replace(state, curmax=curmax), best,
+                gain / state.n_eff)
+
+    def flush_pending(self, state: FacilityState, cache, prev
+                      ) -> FacilityState:
+        curmax = ops.apply_column(cache, state.curmax, prev, mode="max")
+        return dataclasses.replace(state, curmax=curmax)
+
+    def replay_batch(self, state: FacilityState, payloads, valid
+                     ) -> FacilityState:
+        mat = ops.pairwise_matrix(state.ground, payloads, mode="dot",
+                                  backend=self.backend)
+        curmax = ops.masked_col_reduce(mat, valid, state.curmax, mode="max")
+        return dataclasses.replace(state, curmax=curmax)
 
 
 def make_objective(name: str, *, universe: int = 0, backend: str = None):

@@ -8,6 +8,15 @@ worst-case O(nk) evaluations, identical selections, fixed trip count. The
 CPU simulator (core/simulate.py) retains true Lazy Greedy for the paper's
 call-count accounting. See DESIGN §4.
 
+Two inner-loop engines (DESIGN §Perf): the per-step path above, and the
+FUSED cached-matrix engine — `objective.prepare()` computes the N×C
+distance/similarity matrix once, then each scan step is a single fused
+kernel (deferred winner-column update + masked gains + on-chip argmax)
+over the cache: O(N·C·D) + k·O(N·C) total instead of k·O(N·C·D), kernel
+calls per greedy 3k → k+1. `engine='auto'` picks fused whenever the
+objective has cacheable structure and the matrix fits the memory budget
+(ops.fused_plan); both engines make identical selections.
+
 Solutions are fixed-shape: (k,) ids + (k, …) payloads + (k,) validity mask
 (“maximum marginal gain is zero → break” becomes masking).
 """
@@ -51,7 +60,7 @@ def greedy(objective, ids: jax.Array, payloads: jax.Array, valid: jax.Array,
            k: int, ground: Optional[jax.Array] = None,
            ground_valid: Optional[jax.Array] = None,
            sample: int = 0, key: Optional[jax.Array] = None,
-           constraint=None) -> Solution:
+           constraint=None, engine: str = "auto") -> Solution:
     """Select ≤ k elements maximizing the objective.
 
     ids/payloads/valid: (n, …) candidate pool. ground/ground_valid override
@@ -67,7 +76,26 @@ def greedy(objective, ids: jax.Array, payloads: jax.Array, valid: jax.Array,
     ``constraint``: optional hereditary constraint (core.constraints) —
     e.g. PartitionMatroid; infeasible candidates are masked each step
     (paper §7 future work; Greedy is 1/2-approximate under matroids).
+
+    ``engine`` selects the inner loop (DESIGN §Perf):
+      * 'auto'  — cached-matrix fused engine when the objective supports
+                  prepare(), the (N, C) cache fits the memory budget
+                  (ops.fused_plan), and sampling is off; per-step
+                  otherwise.
+      * 'fused' — force the cached engine (even under sampling; still
+                  silently falls back when the objective has no cacheable
+                  structure, e.g. coverage, or the cache exceeds budget).
+      * 'step'  — force the legacy recompute-per-step path.
+    Both engines make identical selections; the fused engine's total gains
+    cost is O(N·C·D) + k·O(N·C) instead of k·O(N·C·D). One caveat: on
+    EXACT gain ties under ``sample > 0`` (e.g. duplicate payload rows
+    drawn into one subset) the step path keeps the tied candidate that
+    appears first in sample order while the fused path keeps the lowest
+    candidate index — same payload, possibly different id.
     """
+    if engine not in ("auto", "fused", "step"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "expected 'auto', 'fused', or 'step'")
     n = ids.shape[0]
     if ground is None:
         ground, ground_valid = payloads, valid
@@ -76,6 +104,19 @@ def greedy(objective, ids: jax.Array, payloads: jax.Array, valid: jax.Array,
     if use_sampling:
         key = key if key is not None else jax.random.PRNGKey(0)
         cand_idx = jax.random.randint(key, (k, sample), 0, n)
+
+    cache = None
+    # Under stochastic sampling 'auto' keeps the step path: each step only
+    # evaluates `sample` candidates there (k·s·N·D total), while the fused
+    # engine would pay the full O(N·C·D) prepare plus k whole-(N, C)
+    # reductions — negating the n/sample savings. engine='fused' forces it.
+    fused_ok = engine == "fused" or (engine == "auto" and not use_sampling)
+    if fused_ok and hasattr(objective, "prepare"):
+        cache = objective.prepare(state, payloads, valid)
+    if cache is not None:
+        return _greedy_fused(objective, state, cache, ids, payloads, valid,
+                             k, constraint,
+                             cand_idx if use_sampling else None)
 
     def step(carry, xs):
         state, selected, evals, ccounts = carry
@@ -124,12 +165,73 @@ def greedy(objective, ids: jax.Array, payloads: jax.Array, valid: jax.Array,
                     evals)
 
 
+def _greedy_fused(objective, state, cache, ids, payloads, valid, k,
+                  constraint, cand_idx) -> Solution:
+    """Cached-matrix inner loop (DESIGN §Perf).
+
+    Each scan step is ONE fused kernel call over the cached (N, C) matrix:
+    it folds the previous step's winner column into the state row (the
+    deferred update — no separate O(N·D) update matmul), accumulates the
+    masked relu gains per row-block on-chip, and argmaxes them without the
+    (1, C) gains row ever leaving VMEM. The final accepted winner's column
+    is flushed after the scan so `value(state)` sees the full solution.
+    """
+    n = ids.shape[0]
+    use_sampling = cand_idx is not None
+
+    def step(carry, xs):
+        state, selected, evals, ccounts, prev = carry
+        feas = (constraint.feasible_mask(ccounts) if constraint is not None
+                else jnp.ones((n,), bool))
+        cand_mask = valid & feas & jnp.logical_not(selected)
+        if use_sampling:
+            idx = xs
+            in_sample = jnp.zeros((n,), jnp.bool_).at[idx].set(True)
+            step_mask = cand_mask & in_sample
+            n_evals = jnp.sum(jnp.take(cand_mask, idx).astype(jnp.int32))
+        else:
+            step_mask = cand_mask
+            n_evals = jnp.sum(cand_mask.astype(jnp.int32))
+        state, best, gain = objective.fused_step(state, cache, step_mask,
+                                                 prev)
+        accept = jnp.isfinite(gain) & (gain > 0)
+        payload = jax.tree.map(lambda p: p[best], payloads)
+        selected = selected | (jax.nn.one_hot(best, n, dtype=jnp.bool_)
+                               & accept)
+        if constraint is not None:
+            new_counts = constraint.update(ccounts, best)
+            ccounts = jnp.where(accept, new_counts, ccounts)
+        prev = jnp.where(accept, best.astype(jnp.int32), jnp.int32(-1))
+        evals = evals + n_evals
+        out = (jnp.where(accept, ids[best], -1),
+               jnp.where(accept, payload, jnp.zeros_like(payload)),
+               accept)
+        return (state, selected, evals, ccounts, prev), out
+
+    c0 = (constraint.init_state() if constraint is not None
+          else jnp.zeros((), jnp.int32))
+    carry0 = (state, jnp.zeros((n,), jnp.bool_), jnp.zeros((), jnp.int32),
+              c0, jnp.int32(-1))
+    (state, _, evals, _, prev), (out_ids, out_pay, out_valid) = lax.scan(
+        step, carry0, cand_idx, length=k, unroll=flags.scan_unroll())
+    state = objective.flush_pending(state, cache, prev)
+    return Solution(out_ids, out_pay, out_valid, objective.value(state),
+                    evals)
+
+
 def replay_value(objective, payloads: jax.Array, valid: jax.Array,
                  ground: jax.Array, ground_valid: jax.Array) -> jax.Array:
     """f(S) of an existing solution evaluated on a (new) ground set —
     used at internal tree nodes to score S_prev under the node-local
-    objective before the argmax{f(S), f(S_prev)} (Algorithm 3.1, line 15)."""
+    objective before the argmax{f(S), f(S_prev)} (Algorithm 3.1, line 15).
+
+    When the objective provides `replay_batch`, all k elements are folded
+    into the state in ONE pairwise-kernel call over the ground×solution
+    matrix instead of a sequential k-step update scan (DESIGN §Perf)."""
     state = objective.init_state(ground, ground_valid)
+    if hasattr(objective, "replay_batch"):
+        return objective.value(objective.replay_batch(state, payloads,
+                                                      valid))
 
     def step(state, xs):
         payload, ok = xs

@@ -15,6 +15,14 @@ subtree — the recurrence of Fig. 3. ``argmax{f(S), f(S_prev)}`` (line 15)
 uses ``replay_value`` to score S_prev under the node-local evaluation set.
 RandGreedi is the single-axis special case; the sequential Greedy baseline
 is `core.greedy.greedy` on an unsharded array.
+
+Every Greedy call here (leaves AND accumulation nodes) runs through the
+fused cached-matrix engine when it fits (greedy(engine='auto'), DESIGN
+§Perf): the leaf cache is (n/m)×(n/m) and the accumulation-node cache is
+only (b·k + augment)×(b·k), so internal nodes essentially always take the
+fused path, while huge leaf partitions degrade gracefully to the per-step
+kernels via the ops.fused_plan memory gate — the paper's whole point is
+respecting per-machine memory limits (§6.1/§6.4).
 """
 from __future__ import annotations
 
@@ -65,11 +73,14 @@ def _broadcast_from_root(sol: Solution, tree_axes: Sequence[str],
 def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
                       radices: Sequence[int],
                       augment: Optional[jax.Array] = None,
-                      sample_leaf: int = 0, sample_level: int = 0):
+                      sample_leaf: int = 0, sample_level: int = 0,
+                      engine: str = "auto"):
     """Returns the per-lane SPMD function (for use inside shard_map).
 
     ``sample_leaf`` / ``sample_level``: stochastic-greedy sampling at the
-    leaves / accumulation nodes (Mirzasoleiman et al. 2015)."""
+    leaves / accumulation nodes (Mirzasoleiman et al. 2015).
+    ``engine``: inner-loop selection engine for every Greedy call
+    ('auto' = fused cached-matrix when it fits the memory budget)."""
 
     def fn(ids, payloads, valid, *aug):
         # ---- leaves: Greedy on the local random partition ------------------
@@ -79,7 +90,7 @@ def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
                 jax.random.PRNGKey(17),
                 _machine_flat_id(tree_axes, radices))
         s_prev = greedy(objective, ids, payloads, valid, k,
-                        sample=sample_leaf, key=leaf_key)
+                        sample=sample_leaf, key=leaf_key, engine=engine)
 
         # ---- accumulation levels ------------------------------------------
         for lvl, ax in enumerate(tree_axes):
@@ -98,7 +109,7 @@ def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
                     _machine_flat_id(tree_axes, radices))
             s_new = greedy(objective, u_ids, u_pay, u_val, k,
                            ground=ground, ground_valid=ground_valid,
-                           sample=sample_level, key=lvl_key)
+                           sample=sample_level, key=lvl_key, engine=engine)
             prev_score = replay_value(objective, s_prev.payloads,
                                       s_prev.valid, ground, ground_valid)
             s_prev = select_better(
@@ -115,7 +126,7 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
                          tree_axes: Sequence[str],
                          augment: Optional[jax.Array] = None,
                          sample_leaf: int = 0, sample_level: int = 0,
-                         ) -> Solution:
+                         engine: str = "auto") -> Solution:
     """Run distributed GreedyML over `mesh`.
 
     ids/payloads/valid: leading dim n sharded over `tree_axes` (outermost
@@ -132,7 +143,7 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
         args.append(augment)
     fn = greedyml_shmap_fn(objective, k, tree_axes, radices,
                            sample_leaf=sample_leaf,
-                           sample_level=sample_level)
+                           sample_level=sample_level, engine=engine)
     out = shard_map(fn, mesh=mesh,
                     in_specs=tuple(in_specs),
                     out_specs=Solution(P(), P(), P(), P(), P()),
@@ -142,14 +153,15 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
 
 def randgreedi_distributed(objective, ids, payloads, valid, k, mesh,
                            machine_axes: Sequence[str],
-                           augment=None) -> Solution:
+                           augment=None, engine: str = "auto") -> Solution:
     """RandGreedi = GreedyML with a single accumulation level: all machine
     axes form ONE level (gather everything to every lane, one global
     Greedy). Implemented by flattening the axes tuple into one level."""
     radices = [math.prod(mesh.shape[a] for a in machine_axes)]
 
     def fn(ids_, payloads_, valid_, *aug):
-        s_leaf = greedy(objective, ids_, payloads_, valid_, k)
+        s_leaf = greedy(objective, ids_, payloads_, valid_, k,
+                        engine=engine)
         u_ids, u_pay, u_val = s_leaf.ids, s_leaf.payloads, s_leaf.valid
         for ax in machine_axes:
             u_ids = lax.all_gather(u_ids, ax, axis=0, tiled=True)
@@ -161,7 +173,8 @@ def randgreedi_distributed(objective, ids, payloads, valid, k, mesh,
             ground_valid = jnp.concatenate(
                 [u_val, jnp.ones(aug[0][0].shape[0], bool)], axis=0)
         s_new = greedy(objective, u_ids, u_pay, u_val, k,
-                       ground=ground, ground_valid=ground_valid)
+                       ground=ground, ground_valid=ground_valid,
+                       engine=engine)
         prev_score = replay_value(objective, s_leaf.payloads, s_leaf.valid,
                                   ground, ground_valid)
         s_prev = select_better(

@@ -26,6 +26,7 @@ import numpy as np
 from repro.core.functions import make_objective
 from repro.core.greedy import Solution, greedy, replay_value, select_better
 from repro.core.tree import AccumulationTree
+from repro.kernels import ops as kernel_ops
 
 F32 = jnp.float32
 
@@ -92,7 +93,8 @@ def global_value(objective_name: str, data: Any, ids: np.ndarray,
 def run_tree_dense(objective_name: str, payloads: np.ndarray, k: int,
                    tree: AccumulationTree, seed: int = 0, *,
                    universe: int = 0, augment: int = 0,
-                   backend: Optional[str] = None) -> SimResult:
+                   backend: Optional[str] = None,
+                   engine: str = "auto") -> SimResult:
     n = payloads.shape[0]
     m, b, L = tree.m, tree.b, tree.num_levels
     obj = make_objective(objective_name, universe=universe, backend=backend)
@@ -116,10 +118,13 @@ def run_tree_dense(objective_name: str, payloads: np.ndarray, k: int,
     rng = np.random.default_rng(seed + 1)
 
     def leaf_fn(ids, pay, val):
-        return greedy(obj, ids, pay, val, k)
+        return greedy(obj, ids, pay, val, k, engine=engine)
 
-    sols = jax.jit(jax.vmap(leaf_fn))(
-        jnp.asarray(pool_ids), jnp.asarray(pool_pay), jnp.asarray(pool_valid))
+    # m leaf caches live at once under vmap → scale the fused budget gate
+    with kernel_ops.fused_replicas(m):
+        sols = jax.jit(jax.vmap(leaf_fn))(
+            jnp.asarray(pool_ids), jnp.asarray(pool_pay),
+            jnp.asarray(pool_valid))
     per_node: Dict[Tuple[int, int], int] = {
         (0, i): int(sols.evals[i]) for i in range(m)}
     comm = 0
@@ -160,13 +165,14 @@ def run_tree_dense(objective_name: str, payloads: np.ndarray, k: int,
             else:
                 ground, gval = pay, val
             s_new = greedy(obj, ids, pay, val, k, ground=ground,
-                           ground_valid=gval)
+                           ground_valid=gval, engine=engine)
             return s_new, ground, gval
 
         args = [jnp.asarray(u_ids), jnp.asarray(u_pay), jnp.asarray(u_val)]
         if aug_arr is not None:
             args.append(jnp.asarray(aug_arr))
-        new_sols, grounds, gvals = jax.jit(jax.vmap(node_fn))(*args)
+        with kernel_ops.fused_replicas(len(nodes)):
+            new_sols, grounds, gvals = jax.jit(jax.vmap(node_fn))(*args)
 
         # argmax{f(S), f(S_prev)} — S_prev is the same-id child's solution
         prev = jax.tree.map(lambda x: x[np.asarray(prev_rows)], sols)
@@ -192,11 +198,12 @@ def run_tree_dense(objective_name: str, payloads: np.ndarray, k: int,
 
 def run_greedy_dense(objective_name: str, payloads: np.ndarray, k: int, *,
                      universe: int = 0,
-                     backend: Optional[str] = None) -> SimResult:
+                     backend: Optional[str] = None,
+                     engine: str = "auto") -> SimResult:
     """Sequential Greedy baseline (one node, whole data)."""
     obj = make_objective(objective_name, universe=universe, backend=backend)
     n = payloads.shape[0]
-    sol = jax.jit(lambda i, p, v: greedy(obj, i, p, v, k))(
+    sol = jax.jit(lambda i, p, v: greedy(obj, i, p, v, k, engine=engine))(
         jnp.arange(n, dtype=jnp.int32), jnp.asarray(payloads),
         jnp.ones(n, bool))
     ids_out = np.asarray(sol.ids)[np.asarray(sol.valid)]

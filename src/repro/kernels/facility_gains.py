@@ -19,7 +19,7 @@ TILE_N = 256
 TILE_C = 128
 
 
-def _kernel(ground_ref, curmax_ref, cands_ref, out_ref, *, n_total: int):
+def _kernel(ground_ref, curmax_ref, cands_ref, out_ref):
     ni = pl.program_id(1)
 
     @pl.when(ni == 0)
@@ -33,26 +33,25 @@ def _kernel(ground_ref, curmax_ref, cands_ref, out_ref, *, n_total: int):
     sim = jax.lax.dot_general(g, c, (((1,), (1,)), ((), ())),
                               preferred_element_type=F32)     # (TN, TC)
     inc = jnp.maximum(sim - m.T, 0.0)
-    out_ref[...] += jnp.sum(inc, axis=0, keepdims=True) / n_total
+    out_ref[...] += jnp.sum(inc, axis=0, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "n_total"))
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def facility_gains_pallas(ground: jax.Array, curmax: jax.Array,
-                          cands: jax.Array, interpret: bool = False,
-                          n_total: int = 0
+                          cands: jax.Array, interpret: bool = False
                           ) -> jax.Array:
-    """ground: (N, D), curmax: (N,), cands: (C, D) → gains (C,) fp32.
+    """ground: (N, D), curmax: (N,), cands: (C, D) → RAW gain sums (C,)
+    fp32 (callers divide by the logical N; keeps N out of the compile key).
 
     Padded ground rows must carry curmax = +inf (⇒ zero contribution);
     the ops.py wrapper guarantees this.
     """
     n, d = ground.shape
     c = cands.shape[0]
-    n_total = n_total or n
     assert n % TILE_N == 0 and c % TILE_C == 0 and d % 128 == 0, (n, c, d)
     grid = (c // TILE_C, n // TILE_N)
     out = pl.pallas_call(
-        functools.partial(_kernel, n_total=n_total),
+        _kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((TILE_N, d), lambda ci, ni: (ni, 0)),

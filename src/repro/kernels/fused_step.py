@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: one fused greedy selection step over a cached matrix.
+
+Second half of the fused selection engine (DESIGN §Perf). Given the cached
+(N, C) distance/similarity matrix from `pairwise.py`, a greedy step is
+
+    1. apply the PREVIOUS winner's column to the per-ground-row state
+       (mind ← min(mind, M[:, prev]) for k-medoid,
+        curmax ← max(curmax, M[:, prev]) for facility) — the deferred
+       update, fused here so no separate O(N·D) update matmul exists;
+    2. per-tile partial gains  Σ_rows relu(±(state − M))  accumulated in a
+       VMEM scratch row — the (1, C) gains never round-trip through HBM;
+    3. masked argmax over the accumulated gains ON-CHIP at the last grid
+       step, emitting only (best_idx, best_gain) scalars.
+
+Grid: (N/BN,) — each program holds a (BN, C) row-block of the cached matrix
+in VMEM. BN is chosen by the ops.py wrapper so BN·C·4 fits the VMEM budget;
+when even BN=8 does not fit, the wrapper signals the caller to fall back to
+the per-step engine (the paper's memory-capped regime).
+
+Modes: 'min' (k-medoid: state row is mind, gain = relu(mind − M)) and
+'max' (facility: state row is curmax, gain = relu(M − curmax)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+_NEG_INF = float("-inf")
+
+
+def _kernel(prev_ref, mat_ref, row_ref, mask_ref,
+            newrow_ref, best_ref, gain_ref, acc_ref, *, mode: str):
+    ni = pl.program_id(0)
+    prev = prev_ref[0, 0]
+
+    m = mat_ref[...].astype(F32)                       # (BN, C)
+    r = row_ref[...].astype(F32)                       # (1, BN)
+
+    # 1. deferred update: fold the previous winner's column into the state
+    col = jax.lax.dynamic_slice(m, (0, jnp.maximum(prev, 0)),
+                                (m.shape[0], 1)).T     # (1, BN)
+    upd = jnp.minimum(r, col) if mode == "min" else jnp.maximum(r, col)
+    new_r = jnp.where(prev >= 0, upd, r)
+    newrow_ref[...] = new_r
+
+    # 2. partial gains for this row block, accumulated on-chip
+    part = (jnp.maximum(new_r.T - m, 0.0) if mode == "min"
+            else jnp.maximum(m - new_r.T, 0.0))        # (BN, C)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.sum(part, axis=0, keepdims=True)
+
+    # 3. masked argmax at the final grid step — scalars out, no (1, C) row
+    @pl.when(ni == pl.num_programs(0) - 1)
+    def _argmax():
+        g = jnp.where(mask_ref[...] > 0, acc_ref[...], _NEG_INF)   # (1, C)
+        mx = jnp.max(g)
+        cols = jax.lax.broadcasted_iota(jnp.int32, g.shape, 1)
+        first = jnp.min(jnp.where(g == mx, cols, jnp.int32(2 ** 30)))
+        best_ref[0, 0] = first
+        gain_ref[0, 0] = mx
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_n", "interpret"))
+def fused_step_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
+                      prev: jax.Array, mode: str = "min",
+                      block_n: int = 256, interpret: bool = False):
+    """mat: (N, C) cached matrix, row: (N,) state, mask: (C,) 0/1 f32,
+    prev: () int32 previous winner (-1 = none).
+
+    Returns (new_row (N,), best () int32, best_gain () f32). best_gain is
+    the raw masked relu-sum — callers normalize by the valid ground count.
+    N, C padded to (block_n, 128) multiples by the ops.py wrapper.
+    """
+    n, c = mat.shape
+    assert n % block_n == 0 and c % 128 == 0, (n, c, block_n)
+    grid = (n // block_n,)
+    new_row, best, gain = pl.pallas_call(
+        functools.partial(_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ni: (0, 0)),
+            pl.BlockSpec((block_n, c), lambda ni: (ni, 0)),
+            pl.BlockSpec((1, block_n), lambda ni: (0, ni)),
+            pl.BlockSpec((1, c), lambda ni: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda ni: (0, ni)),
+            pl.BlockSpec((1, 1), lambda ni: (0, 0)),
+            pl.BlockSpec((1, 1), lambda ni: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), F32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, c), F32)],
+        interpret=interpret,
+    )(prev.reshape(1, 1).astype(jnp.int32), mat, row.reshape(1, n), mask.reshape(1, c))
+    return new_row[0], best[0, 0], gain[0, 0]

@@ -29,7 +29,7 @@ TILE_N = 256
 TILE_C = 128
 
 
-def _kernel(ground_ref, mind_ref, cands_ref, out_ref, *, n_total: int):
+def _kernel(ground_ref, mind_ref, cands_ref, out_ref):
     ni = pl.program_id(1)
 
     @pl.when(ni == 0)
@@ -50,26 +50,25 @@ def _kernel(ground_ref, mind_ref, cands_ref, out_ref, *, n_total: int):
     mind_col = m.T                                     # (TN, 1)
     reduction = jnp.maximum(mind_col - dist, 0.0)      # m - min(m, d)
     partial = jnp.sum(reduction, axis=0, keepdims=True)  # (1, TC)
-    out_ref[...] += partial / n_total
+    out_ref[...] += partial
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "n_total"))
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def kmedoid_gains_pallas(ground: jax.Array, mind: jax.Array,
-                         cands: jax.Array, interpret: bool = False,
-                         n_total: int = 0
+                         cands: jax.Array, interpret: bool = False
                          ) -> jax.Array:
-    """ground: (N, D), mind: (N,), cands: (C, D) → gains (C,) fp32.
+    """ground: (N, D), mind: (N,), cands: (C, D) → RAW gain sums (C,) fp32
+    (callers divide by the logical N so it never becomes a compile key).
 
     N, C, D must be padded to tile multiples by the ops.py wrapper
     (pad ground rows with mind=0 ⇒ zero contribution).
     """
     n, d = ground.shape
     c = cands.shape[0]
-    n_total = n_total or n
     assert n % TILE_N == 0 and c % TILE_C == 0 and d % 128 == 0, (n, c, d)
     grid = (c // TILE_C, n // TILE_N)
     out = pl.pallas_call(
-        functools.partial(_kernel, n_total=n_total),
+        _kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((TILE_N, d), lambda ci, ni: (ni, 0)),

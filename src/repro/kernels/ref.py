@@ -25,10 +25,7 @@ def kmedoid_gains(ground: jax.Array, mind: jax.Array, cands: jax.Array,
     setup.
     """
     n = ground.shape[0]
-    sq = (jnp.sum(ground.astype(F32) ** 2, -1)[:, None]
-          + jnp.sum(cands.astype(F32) ** 2, -1)[None, :]
-          - 2.0 * ground.astype(F32) @ cands.astype(F32).T)
-    dist = jnp.sqrt(jnp.maximum(sq, 0.0))              # (N, C)
+    dist = pairwise_dist(ground, cands)                # (N, C)
     new_mind = jnp.minimum(mind[:, None], dist)
     gains = jnp.sum(mind[:, None] - new_mind, axis=0) / n
     return jnp.where(cand_valid, gains, -jnp.inf)
@@ -41,7 +38,7 @@ def facility_gains(ground: jax.Array, curmax: jax.Array, cands: jax.Array,
     sim = inner product; gain(c) = mean(max(0, sim(·,c) - curmax)).
     """
     n = ground.shape[0]
-    sim = ground.astype(F32) @ cands.astype(F32).T     # (N, C)
+    sim = pairwise_sim(ground, cands)                  # (N, C)
     inc = jnp.maximum(sim - curmax[:, None], 0.0)
     gains = jnp.sum(inc, axis=0) / n
     return jnp.where(cand_valid, gains, -jnp.inf)
@@ -57,6 +54,43 @@ def coverage_gains(cand_bits: jax.Array, covered: jax.Array,
     new = jnp.bitwise_and(cand_bits, jnp.bitwise_not(covered)[None, :])
     gains = jnp.sum(jax.lax.population_count(new).astype(jnp.int32), axis=-1)
     return jnp.where(cand_valid, gains.astype(F32), -jnp.inf)
+
+
+def pairwise_dist(ground: jax.Array, cands: jax.Array) -> jax.Array:
+    """(N, D) × (C, D) → (N, C) Euclidean distances, the k-medoid cached
+    matrix (same ‖x‖²+‖c‖²−2⟨x,c⟩ expansion as the tiled kernel)."""
+    sq = (jnp.sum(ground.astype(F32) ** 2, -1)[:, None]
+          + jnp.sum(cands.astype(F32) ** 2, -1)[None, :]
+          - 2.0 * ground.astype(F32) @ cands.astype(F32).T)
+    return jnp.sqrt(jnp.maximum(sq, 0.0))
+
+
+def pairwise_sim(ground: jax.Array, cands: jax.Array) -> jax.Array:
+    """(N, D) × (C, D) → (N, C) inner products, the facility cached matrix."""
+    return ground.astype(F32) @ cands.astype(F32).T
+
+
+def fused_step(mat: jax.Array, row: jax.Array, mask: jax.Array,
+               prev: jax.Array, mode: str = "min"):
+    """Oracle for the fused selection step over a cached (N, C) matrix.
+
+    Applies the deferred previous-winner column update to the state row
+    (mind for 'min'/k-medoid, curmax for 'max'/facility), then computes the
+    masked relu-sum gains and their argmax. Returns (new_row, best () i32,
+    best_gain () f32); best_gain is the RAW relu sum (no 1/N)."""
+    n, c = mat.shape
+    col = jax.lax.dynamic_slice_in_dim(mat, jnp.maximum(prev, 0), 1,
+                                       axis=1)[:, 0]
+    if mode == "min":
+        upd = jnp.minimum(row, col)
+    else:
+        upd = jnp.maximum(row, col)
+    new_row = jnp.where(prev >= 0, upd, row)
+    part = (jnp.maximum(new_row[:, None] - mat, 0.0) if mode == "min"
+            else jnp.maximum(mat - new_row[:, None], 0.0))
+    gains = jnp.where(mask > 0, jnp.sum(part, axis=0), -jnp.inf)
+    best = jnp.argmax(gains).astype(jnp.int32)
+    return new_row, best, gains[best]
 
 
 def kmedoid_update(ground: jax.Array, mind: jax.Array, chosen: jax.Array

@@ -1,0 +1,94 @@
+"""Minimal deterministic stand-in for `hypothesis` when it isn't installed.
+
+The container image doesn't ship hypothesis and we can't pip install, so the
+property tests fall back to a fixed-seed sampler covering the same API
+surface they use: ``given(**kw)``, ``settings(max_examples=, deadline=)``,
+``strategies.integers`` and ``strategies.sampled_from``. Each test runs
+against the strategy bounds plus a deterministic random sweep — no
+shrinking, no example database, but the invariants still get exercised on
+every CI run with reproducible inputs.
+"""
+from __future__ import annotations
+
+import random
+
+_MAX_EXAMPLES_CAP = 20      # keep CPU runtime bounded vs hypothesis' default
+
+
+class _Strategy:
+    def boundary_examples(self):
+        return []
+
+    def sample(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def boundary_examples(self):
+        return [self.lo, self.hi] if self.lo != self.hi else [self.lo]
+
+    def sample(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def boundary_examples(self):
+        return [self.elements[0]]
+
+    def sample(self, rng):
+        return rng.choice(self.elements)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        return _SampledFrom(elements)
+
+
+def settings(**kwargs):
+    """Records max_examples on the wrapped function; deadline is ignored."""
+    def deco(fn):
+        fn._fallback_settings = kwargs
+        return fn
+    return deco
+
+
+def given(**strats):
+    """Runs the test over boundary values + a deterministic random sweep."""
+    def deco(fn):
+        cfg = getattr(fn, "_fallback_settings", {})
+        n = min(int(cfg.get("max_examples", 10)), _MAX_EXAMPLES_CAP)
+
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0xC0FFEE)
+            names = sorted(strats)
+            # boundary pass: extremes of the first strategy, others at lo
+            drawn = []
+            firsts = strats[names[0]].boundary_examples()
+            for v in firsts:
+                ex = {names[0]: v}
+                for k in names[1:]:
+                    ex[k] = strats[k].boundary_examples()[0]
+                drawn.append(ex)
+            while len(drawn) < n:
+                drawn.append({k: strats[k].sample(rng) for k in names})
+            for ex in drawn[:n]:
+                fn(*args, **ex, **kwargs)
+
+        # NOT functools.wraps: pytest would follow __wrapped__ and treat the
+        # strategy parameters as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

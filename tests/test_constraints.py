@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # image has no hypothesis
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.constraints import PartitionMatroid, uniform_matroid
 from repro.core.functions import make_objective

@@ -78,3 +78,75 @@ def test_kernels_zero_candidates_masked():
     valid = jnp.zeros(32, bool)
     g = ops.kmedoid_gains(ground, mind, cands, valid, backend="interpret")
     assert bool(jnp.all(jnp.isneginf(g)))
+
+
+# ---------------------------------------------------------------------------
+# Fused selection engine kernels (DESIGN §Perf)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,c", [(64, 32), (256, 128), (300, 150), (33, 260)])
+@pytest.mark.parametrize("d", [16, 128])
+@pytest.mark.parametrize("mode", ["dist", "dot"])
+def test_pairwise_matrix_matches_ref(n, c, d, mode):
+    ground, cands, _, _ = _mk(jax.random.PRNGKey(n + c + d), n, c, d,
+                              jnp.float32)
+    r = ops.pairwise_matrix(ground, cands, mode=mode, backend="ref")
+    p = ops.pairwise_matrix(ground, cands, mode=mode, backend="interpret")
+    assert p.shape[0] % 256 == 0 and p.shape[1] % 128 == 0  # bucketed pad
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p)[:n, :c],
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("n,c", [(64, 32), (300, 150), (512, 17)])
+@pytest.mark.parametrize("mode", ["min", "max"])
+@pytest.mark.parametrize("prev", [-1, 0, 5])
+def test_fused_step_matches_ref(n, c, mode, prev):
+    ground, cands, aux, valid = _mk(jax.random.PRNGKey(n * c + prev), n, c,
+                                    16, jnp.float32)
+    m_ref = ops.pairwise_matrix(ground, cands, mode="dist", backend="ref")
+    m_pal = ops.pairwise_matrix(ground, cands, mode="dist",
+                                backend="interpret")
+    row = aux if mode == "min" else jnp.zeros((n,), jnp.float32)
+    prev_arr = jnp.int32(min(prev, c - 1))
+    r_row, r_best, r_gain = ops.fused_step(m_ref, row, valid, prev_arr,
+                                           mode=mode, backend="ref")
+    p_row, p_best, p_gain = ops.fused_step(m_pal, row, valid, prev_arr,
+                                           mode=mode, backend="interpret")
+    assert int(r_best) == int(p_best)
+    assert p_row.shape == (n,)
+    np.testing.assert_allclose(np.asarray(r_row), np.asarray(p_row),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(float(r_gain), float(p_gain),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_fused_step_all_masked_returns_neginf():
+    ground, cands, aux, _ = _mk(jax.random.PRNGKey(0), 64, 32, 16,
+                                jnp.float32)
+    mat = ops.pairwise_matrix(ground, cands, mode="dist",
+                              backend="interpret")
+    _, best, gain = ops.fused_step(mat, aux, jnp.zeros(32, bool),
+                                   jnp.int32(-1), mode="min",
+                                   backend="interpret")
+    assert bool(jnp.isneginf(gain)) and int(best) == 0
+
+
+def test_fused_plan_memory_gate(monkeypatch):
+    assert ops.fused_plan(256, 128, backend="interpret") is not None
+    monkeypatch.setenv("REPRO_FUSED_CACHE_MB", "0.05")
+    assert ops.fused_plan(4096, 4096, backend="interpret") is None
+    monkeypatch.delenv("REPRO_FUSED_CACHE_MB")
+    monkeypatch.setenv("REPRO_FUSED_VMEM_MB", "0.001")
+    assert ops.fused_plan(256, 128, backend="interpret") is None
+    # ref backend ignores the VMEM gate (no Pallas block)
+    assert ops.fused_plan(256, 128, backend="ref") is not None
+
+
+def test_pad_bucketing_powers_of_two():
+    assert ops._bucket_len(1, 128) == 128
+    assert ops._bucket_len(128, 128) == 128
+    assert ops._bucket_len(129, 128) == 256
+    assert ops._bucket_len(300, 128) == 512
+    assert ops._bucket_len(2048, 256) == 2048
+    assert ops._bucket_len(2049, 256) == 4096

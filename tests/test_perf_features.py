@@ -73,14 +73,22 @@ def test_moe_token_exchange_grad_finite():
         assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
 
 
+def _abstract_mesh(sizes, names):
+    """jax 0.4.37 takes ((name, size), …); ≥0.5 takes (sizes, names)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(sizes), tuple(names))
+
+
 def test_sharding_profiles_switch_and_restore():
     assert AX.current_profile() == "default"
     AX.use_profile("dp_only")
     try:
         assert AX.current_profile() == "dp_only"
         # dp_only: act_batch can take all three axes; params drop TP
-        from jax.sharding import AbstractMesh
-        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        mesh = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
         spec = AX.resolve_spec(("act_batch",), (512,), mesh,
                                AX.current_act_rules())
         assert spec[0] == ("pod", "data", "model")
@@ -90,8 +98,8 @@ def test_sharding_profiles_switch_and_restore():
     finally:
         AX.use_profile("default")
     spec = AX.resolve_spec(("act_batch",), (512,),
-                           AbstractMesh((2, 16, 16),
-                                        ("pod", "data", "model")),
+                           _abstract_mesh((2, 16, 16),
+                                          ("pod", "data", "model")),
                            AX.current_act_rules())
     assert spec[0] == ("pod", "data")
 
