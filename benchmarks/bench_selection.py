@@ -1,9 +1,13 @@
-"""Selection-engine perf: fused cached-matrix greedy vs per-step reference.
+"""Selection-engine perf: megakernel vs fused cached-matrix vs per-step.
 
-Tracks the perf trajectory of the DESIGN §Perf selection engine from the PR
-that introduced it onward, emitting ``benchmarks/BENCH_selection.json``
-with per-objective step time, gains-kernel effective GB/s, evals/s, and the
-kernel-call/FLOP model.
+Tracks the perf trajectory of the DESIGN §Perf selection engines from the
+PR that introduced them onward, emitting ``benchmarks/BENCH_selection.json``
+with per-objective step time, gains-kernel effective GB/s, evals/s, the
+kernel-call/FLOP model, and a COUNTED dispatch column: Pallas kernel
+dispatches per greedy are read off the traced jaxpr (scan bodies × trip
+count), verifying the k+1 → 2 (streaming megakernel) → 1 (VMEM-resident
+megakernel, the accumulation-node shape) reduction rather than asserting
+it from the model.
 
 Two backends are measured:
 
@@ -37,6 +41,41 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_selection.json")
 
 HEADLINE = dict(n=4096, d=256, k=32)          # acceptance config (C = N)
 SMALL = dict(n=1024, d=256, k=16)
+NODE = dict(n=256, d=128, k=16)               # accumulation-node shape
+                                              # (b·k candidates; resident)
+
+
+def _count_pallas_dispatches(jaxpr) -> int:
+    """Pallas dispatches per execution, statically from the jaxpr: each
+    pallas_call eqn counts once, scan bodies count × trip length."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+            continue
+        mult = (eqn.params.get("length", 1)
+                if eqn.primitive.name == "scan" else 1)
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (tuple, list)) else (v,)):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    total += mult * _count_pallas_dispatches(inner)
+    return total
+
+
+def _dispatch_counts(name, n, d, k):
+    """Counted dispatches per greedy for each engine (interpret backend —
+    same kernel structure as compiled TPU, trace only, nothing runs)."""
+    obj = make_objective(name, backend="interpret")
+    x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    ids = jax.ShapeDtypeStruct((n,), jnp.int32)
+    valid = jax.ShapeDtypeStruct((n,), jnp.bool_)
+    out = {}
+    for engine in ("step", "fused", "mega"):
+        fn = lambda i, p, v: greedy(obj, i, p, v, k, engine=engine)
+        out[engine] = _count_pallas_dispatches(
+            jax.make_jaxpr(fn)(ids, x, valid).jaxpr)
+    return out
 
 
 def _time_greedy(obj, ids, pay, valid, k, engine, reps=1):
@@ -53,27 +92,42 @@ def _time_greedy(obj, ids, pay, valid, k, engine, reps=1):
 
 
 def _vector_objective_rows(name, n, d, k, backends):
+    from repro.kernels import ops
     x = jnp.asarray(gen_images(n, d, classes=16, seed=0))
     ids = jnp.arange(n, dtype=jnp.int32)
     valid = jnp.ones(n, bool)
+    dispatches = _dispatch_counts(name, n, d, k)
     out = {}
     for backend in backends:
         obj = make_objective(name, backend=backend)
+        plan = ops.fused_plan(n, n, d=d, backend=backend)
         t_step, sol_s = _time_greedy(obj, ids, x, valid, k, "step")
         t_fused, sol_f = _time_greedy(obj, ids, x, valid, k, "fused")
+        t_mega, sol_m = _time_greedy(obj, ids, x, valid, k, "mega")
         assert (sol_s.ids == sol_f.ids).all(), "engines must agree"
-        evals = int(sol_f.evals)
+        assert (sol_s.ids == sol_m.ids).all(), "megakernel must agree"
+        evals = int(sol_m.evals)
         out[backend] = dict(
             wall_step_s=round(t_step, 4),
             wall_fused_s=round(t_fused, 4),
+            wall_mega_s=round(t_mega, 4),
             speedup=round(t_step / max(t_fused, 1e-9), 2),
+            speedup_mega=round(t_step / max(t_mega, 1e-9), 2),
             step_time_fused_ms=round(t_fused / k * 1e3, 3),
-            # per step the fused engine re-reads the cached (N, C) matrix;
-            # C = N here, and the denominator includes the one-time prepare
+            step_time_mega_ms=round(t_mega / k * 1e3, 3),
+            # PR-1 series (fused-based), kept comparable across commits;
+            # per step the engines re-read the cached (N, C) matrix, C = N
+            # here, denominators include the one-time prepare
             gains_gbps=round(k * n * n * 4 / max(t_fused, 1e-9) / 1e9, 2),
             evals_per_s=round(evals / max(t_fused, 1e-9), 1),
-            kernel_calls_step=3 * k,          # gains + update + replay-pass
-            kernel_calls_fused=k + 1,         # prepare + k fused steps
+            gains_gbps_mega=round(k * n * n * 4 / max(t_mega, 1e-9) / 1e9,
+                                  2),
+            evals_per_s_mega=round(evals / max(t_mega, 1e-9), 1),
+            # counted from the jaxpr (interpret trace), not modeled:
+            dispatches_step=dispatches["step"],
+            dispatches_fused=dispatches["fused"],   # prepare + k steps
+            dispatches_mega=dispatches["mega"],     # 2 streaming, 1 resident
+            mega_tier=plan["tier"] if plan else "fallback",
         )
     return out
 
@@ -113,6 +167,16 @@ def run(full: bool = False):
                                                ("interpret", "ref")),
             "coverage": _coverage_row(min(n, 4096), min(n, 4096), k),
         },
+        # accumulation-node shape (b·k candidates): the megakernel's
+        # VMEM-resident tier — whole greedy in ONE dispatch
+        accumulation_node=dict(
+            config=NODE,
+            kmedoid=_vector_objective_rows(
+                "kmedoid", NODE["n"], NODE["d"], NODE["k"], ("interpret",)),
+            facility=_vector_objective_rows(
+                "facility", NODE["n"], NODE["d"], NODE["k"],
+                ("interpret",)),
+        ),
         flop_model_headline=flop_model(HEADLINE["n"], HEADLINE["n"],
                                        HEADLINE["d"], HEADLINE["k"]),
     )
@@ -135,13 +199,22 @@ def run(full: bool = False):
 def main(full: bool = False):
     res, out_path = run(full)
     rows = []
-    print("objective,backend,wall_step_s,wall_fused_s,speedup,gains_gbps")
-    for name, per_backend in res["objectives"].items():
+    print("objective,backend,wall_step_s,wall_fused_s,wall_mega_s,"
+          "speedup_mega,dispatches(step/fused/mega),tier")
+    sections = list(res["objectives"].items()) + [
+        (f"node:{name}", per)
+        for name, per in res["accumulation_node"].items()
+        if name != "config"]
+    for name, per_backend in sections:
         for backend, r in per_backend.items():
             rows.append(dict(objective=name, backend=backend, **r))
+            disp = (f"{r.get('dispatches_step', '')}/"
+                    f"{r.get('dispatches_fused', '')}/"
+                    f"{r.get('dispatches_mega', '')}")
             print(f"{name},{backend},{r.get('wall_step_s', '')},"
-                  f"{r.get('wall_fused_s', '')},{r.get('speedup', '')},"
-                  f"{r.get('gains_gbps', '')}")
+                  f"{r.get('wall_fused_s', '')},{r.get('wall_mega_s', '')},"
+                  f"{r.get('speedup_mega', '')},{disp},"
+                  f"{r.get('mega_tier', '')}")
     fm = res["flop_model_headline"]
     print(f"flop_model@N={fm['n']},C={fm['c']},D={fm['d']},k={fm['k']}: "
           f"{fm['speedup']}x ({fm['step_flops']:.3g} -> "

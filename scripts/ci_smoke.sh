@@ -13,4 +13,8 @@ echo "== kernel tests (REPRO_KERNEL_BACKEND=interpret) =="
 REPRO_KERNEL_BACKEND=interpret python -m pytest -q \
     tests/test_kernels.py tests/test_fused_selection.py
 
+echo "== megakernel parity (REPRO_KERNEL_BACKEND=interpret) =="
+REPRO_KERNEL_BACKEND=interpret python -m pytest -q \
+    tests/test_megakernel.py
+
 echo "CI smoke OK"

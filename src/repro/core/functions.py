@@ -16,16 +16,26 @@ Interface (all methods jit-safe, fixed shapes):
 
 Fused selection engine (optional, DESIGN §Perf) — precompute-once /
 reduce-per-step instead of recompute-everything-per-step:
-  prepare(state, cands, cand_valid) → cache | None
-      One-time O(N·C·D) cached ground×candidate matrix; None when the
-      objective has no cacheable structure (coverage) or the matrix
-      exceeds the memory budget (ops.fused_plan) — callers then fall
-      back to the per-step gains/update path.
+  prepare(state, cands, cand_valid) → (matrix, plan) | None
+      One-time O(N·C·D) cached ground×candidate matrix plus the
+      trace-time fused_plan dict (threaded through every step so the
+      row block is not re-derived k times); None when the objective has
+      no cacheable structure (coverage) or the matrix exceeds the
+      memory budget (ops.fused_plan) — callers then fall back to the
+      per-step gains/update path.
   fused_step(state, cache, cand_mask, prev) → (state, best, gain)
       One selection step: deferred prev-winner column update + masked
       gains + on-chip argmax, all over the cached matrix (O(N·C)).
   flush_pending(state, cache, prev) → state
       Fold the final accepted winner's column after the scan.
+  megakernel_loop(state, cands, cand_valid, k)
+      → (state, bests, gains) | None
+      The whole-greedy megakernel (kernels/greedy_loop.py): ALL k
+      selection steps in one dispatch. The fused_plan tier gate picks
+      VMEM-resident (matrix built on-chip, 1 dispatch — the
+      accumulation-node shape) or streaming (HBM cache re-read per
+      step, 2 dispatches incl. prepare); None when neither tier fits —
+      callers drop to the engines above.
   replay_batch(state, payloads, valid) → state
       All k solution elements folded into a fresh state in ONE pairwise
       kernel call (replaces the sequential k-step update scan).
@@ -46,6 +56,25 @@ from repro.kernels import ops
 
 F32 = jnp.float32
 INF = jnp.inf
+
+
+def _megakernel_rows(ground, cands, row, cand_valid, k, pw_mode, mode,
+                     backend):
+    """Shared megakernel tier dispatch for the vector objectives: run the
+    whole k-step loop over `row` (mind/curmax) and return (new_row, bests,
+    gains), or None when neither megakernel tier fits (DESIGN §Perf)."""
+    plan = ops.fused_plan(ground.shape[0], cands.shape[0],
+                          d=ground.shape[1], backend=backend)
+    if plan is None or plan["tier"] not in ("resident", "streaming"):
+        return None
+    if plan["tier"] == "resident":
+        return ops.greedy_loop_resident(ground, cands, row, cand_valid, k,
+                                        pw_mode=pw_mode, mode=mode,
+                                        backend=backend)
+    mat = ops.pairwise_matrix(ground, cands, mode=pw_mode, backend=backend,
+                              dtype=plan["dtype"])
+    return ops.greedy_loop(mat, row, cand_valid, k, mode=mode,
+                           backend=backend, plan=plan)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -156,22 +185,36 @@ class KMedoid:
         return state.base - jnp.sum(state.mind) / state.n_eff
 
     def prepare(self, state: MedoidState, cands, cand_valid):
-        if ops.fused_plan(state.ground.shape[0], cands.shape[0],
-                          backend=self.backend) is None:
+        plan = ops.fused_plan(state.ground.shape[0], cands.shape[0],
+                              backend=self.backend)
+        if plan is None or (plan["block_n"] == 0
+                            and ops._backend(self.backend) != "ref"):
             return None                       # memory-capped: per-step path
-        return ops.pairwise_matrix(state.ground, cands, mode="dist",
-                                   backend=self.backend)
+        mat = ops.pairwise_matrix(state.ground, cands, mode="dist",
+                                  backend=self.backend, dtype=plan["dtype"])
+        return mat, plan
 
     def fused_step(self, state: MedoidState, cache, cand_mask, prev):
-        mind, best, gain = ops.fused_step(cache, state.mind, cand_mask,
+        mat, plan = cache
+        mind, best, gain = ops.fused_step(mat, state.mind, cand_mask,
                                           prev, mode="min",
-                                          backend=self.backend)
+                                          backend=self.backend, plan=plan)
         return (dataclasses.replace(state, mind=mind), best,
                 gain / state.n_eff)
 
     def flush_pending(self, state: MedoidState, cache, prev) -> MedoidState:
-        mind = ops.apply_column(cache, state.mind, prev, mode="min")
+        mind = ops.apply_column(cache[0], state.mind, prev, mode="min")
         return dataclasses.replace(state, mind=mind)
+
+    def megakernel_loop(self, state: MedoidState, cands, cand_valid,
+                        k: int):
+        rows = _megakernel_rows(state.ground, cands, state.mind,
+                                cand_valid, k, "dist", "min", self.backend)
+        if rows is None:
+            return None
+        mind, bests, gains = rows
+        return (dataclasses.replace(state, mind=mind), bests,
+                gains / state.n_eff)
 
     def replay_batch(self, state: MedoidState, payloads, valid
                      ) -> MedoidState:
@@ -226,23 +269,37 @@ class FacilityLocation:
         return jnp.sum(jnp.where(valid, state.curmax, 0.0)) / state.n_eff
 
     def prepare(self, state: FacilityState, cands, cand_valid):
-        if ops.fused_plan(state.ground.shape[0], cands.shape[0],
-                          backend=self.backend) is None:
+        plan = ops.fused_plan(state.ground.shape[0], cands.shape[0],
+                              backend=self.backend)
+        if plan is None or (plan["block_n"] == 0
+                            and ops._backend(self.backend) != "ref"):
             return None                       # memory-capped: per-step path
-        return ops.pairwise_matrix(state.ground, cands, mode="dot",
-                                   backend=self.backend)
+        mat = ops.pairwise_matrix(state.ground, cands, mode="dot",
+                                  backend=self.backend, dtype=plan["dtype"])
+        return mat, plan
 
     def fused_step(self, state: FacilityState, cache, cand_mask, prev):
-        curmax, best, gain = ops.fused_step(cache, state.curmax, cand_mask,
+        mat, plan = cache
+        curmax, best, gain = ops.fused_step(mat, state.curmax, cand_mask,
                                             prev, mode="max",
-                                            backend=self.backend)
+                                            backend=self.backend, plan=plan)
         return (dataclasses.replace(state, curmax=curmax), best,
                 gain / state.n_eff)
 
     def flush_pending(self, state: FacilityState, cache, prev
                       ) -> FacilityState:
-        curmax = ops.apply_column(cache, state.curmax, prev, mode="max")
+        curmax = ops.apply_column(cache[0], state.curmax, prev, mode="max")
         return dataclasses.replace(state, curmax=curmax)
+
+    def megakernel_loop(self, state: FacilityState, cands, cand_valid,
+                        k: int):
+        rows = _megakernel_rows(state.ground, cands, state.curmax,
+                                cand_valid, k, "dot", "max", self.backend)
+        if rows is None:
+            return None
+        curmax, bests, gains = rows
+        return (dataclasses.replace(state, curmax=curmax), bests,
+                gains / state.n_eff)
 
     def replay_batch(self, state: FacilityState, payloads, valid
                      ) -> FacilityState:

@@ -8,14 +8,17 @@ worst-case O(nk) evaluations, identical selections, fixed trip count. The
 CPU simulator (core/simulate.py) retains true Lazy Greedy for the paper's
 call-count accounting. See DESIGN §4.
 
-Two inner-loop engines (DESIGN §Perf): the per-step path above, and the
+Three inner-loop engines (DESIGN §Perf): the per-step path above; the
 FUSED cached-matrix engine — `objective.prepare()` computes the N×C
 distance/similarity matrix once, then each scan step is a single fused
 kernel (deferred winner-column update + masked gains + on-chip argmax)
 over the cache: O(N·C·D) + k·O(N·C) total instead of k·O(N·C·D), kernel
-calls per greedy 3k → k+1. `engine='auto'` picks fused whenever the
-objective has cacheable structure and the matrix fits the memory budget
-(ops.fused_plan); both engines make identical selections.
+calls per greedy 3k → k+1; and the MEGAKERNEL engine — the ENTIRE k-step
+loop is one Pallas dispatch (`objective.megakernel_loop` →
+kernels/greedy_loop.py), 2 dispatches per greedy on the streaming tier
+and 1 on the VMEM-resident tier (the accumulation-node fast path).
+`engine='auto'` picks the fastest applicable engine via the
+ops.fused_plan tier gate; all engines make identical selections.
 
 Solutions are fixed-shape: (k,) ids + (k, …) payloads + (k,) validity mask
 (“maximum marginal gain is zero → break” becomes masking).
@@ -69,33 +72,45 @@ def greedy(objective, ids: jax.Array, payloads: jax.Array, valid: jax.Array,
 
     ``sample > 0`` enables STOCHASTIC greedy (Mirzasoleiman et al. 2015,
     'Lazier Than Lazy Greedy'): each step evaluates gains on a random
-    subset of `sample` candidates instead of all n — (1−1/e−ε) expected
-    quality with sample ≈ (n/k)·ln(1/ε), cutting the dominant gains term
-    by n/sample. Beyond-paper optimization, see EXPERIMENTS §Perf.
+    subset of `sample` DISTINCT candidates (drawn without replacement, as
+    the paper's uniform s-subset requires) instead of all n — (1−1/e−ε)
+    expected quality with sample ≈ (n/k)·ln(1/ε), cutting the dominant
+    gains term by n/sample. Beyond-paper optimization, see EXPERIMENTS
+    §Perf.
 
     ``constraint``: optional hereditary constraint (core.constraints) —
     e.g. PartitionMatroid; infeasible candidates are masked each step
     (paper §7 future work; Greedy is 1/2-approximate under matroids).
 
     ``engine`` selects the inner loop (DESIGN §Perf):
-      * 'auto'  — cached-matrix fused engine when the objective supports
-                  prepare(), the (N, C) cache fits the memory budget
-                  (ops.fused_plan), and sampling is off; per-step
-                  otherwise.
-      * 'fused' — force the cached engine (even under sampling; still
-                  silently falls back when the objective has no cacheable
-                  structure, e.g. coverage, or the cache exceeds budget).
+      * 'auto'  — megakernel when the objective supports it, the tier gate
+                  (ops.fused_plan) admits it, sampling is off, and no
+                  constraint is active; else the cached-matrix fused
+                  engine when prepare() fits the budget and sampling is
+                  off; per-step otherwise.
+      * 'mega'  — force the whole-greedy megakernel (one dispatch runs
+                  all k steps; 2 dispatches/greedy streaming, 1 resident).
+                  Falls back to the fused engine under constraints or
+                  sampling (the loop kernel evaluates neither feasibility
+                  masks nor per-step subsets), and further to per-step
+                  when the objective has no cacheable structure.
+      * 'fused' — force the cached per-step engine (even under sampling;
+                  still silently falls back when the objective has no
+                  cacheable structure, e.g. coverage, or the cache
+                  exceeds budget).
       * 'step'  — force the legacy recompute-per-step path.
-    Both engines make identical selections; the fused engine's total gains
-    cost is O(N·C·D) + k·O(N·C) instead of k·O(N·C·D). One caveat: on
-    EXACT gain ties under ``sample > 0`` (e.g. duplicate payload rows
-    drawn into one subset) the step path keeps the tied candidate that
-    appears first in sample order while the fused path keeps the lowest
-    candidate index — same payload, possibly different id.
+    All engines make identical selections; the fused engine's total gains
+    cost is O(N·C·D) + k·O(N·C) instead of k·O(N·C·D), and the megakernel
+    additionally removes the per-step dispatch + state-row HBM round-trip.
+    One caveat: on EXACT gain ties under ``sample > 0`` (e.g. duplicate
+    payload rows drawn into one subset) the step path keeps the tied
+    candidate that appears first in sample order while the fused path
+    keeps the lowest candidate index — same payload, possibly different
+    id.
     """
-    if engine not in ("auto", "fused", "step"):
+    if engine not in ("auto", "mega", "fused", "step"):
         raise ValueError(f"unknown engine {engine!r}; "
-                         "expected 'auto', 'fused', or 'step'")
+                         "expected 'auto', 'mega', 'fused', or 'step'")
     n = ids.shape[0]
     if ground is None:
         ground, ground_valid = payloads, valid
@@ -103,14 +118,27 @@ def greedy(objective, ids: jax.Array, payloads: jax.Array, valid: jax.Array,
     use_sampling = 0 < sample < n
     if use_sampling:
         key = key if key is not None else jax.random.PRNGKey(0)
-        cand_idx = jax.random.randint(key, (k, sample), 0, n)
+        cand_idx = _sample_candidates(key, k, n, sample)
+
+    # Megakernel engine: the whole k-step selection in 1–2 dispatches.
+    # Constraints need a per-step feasibility mask and sampling a per-step
+    # candidate subset — neither exists inside the loop kernel, so those
+    # branches drop to the fused per-step engine below (identical
+    # selections either way).
+    if (engine in ("auto", "mega") and not use_sampling
+            and constraint is None
+            and hasattr(objective, "megakernel_loop")):
+        mega = objective.megakernel_loop(state, payloads, valid, k)
+        if mega is not None:
+            return _finalize_mega(objective, mega, ids, payloads, valid, k)
 
     cache = None
     # Under stochastic sampling 'auto' keeps the step path: each step only
     # evaluates `sample` candidates there (k·s·N·D total), while the fused
     # engine would pay the full O(N·C·D) prepare plus k whole-(N, C)
     # reductions — negating the n/sample savings. engine='fused' forces it.
-    fused_ok = engine == "fused" or (engine == "auto" and not use_sampling)
+    fused_ok = engine in ("fused", "mega") or (engine == "auto"
+                                               and not use_sampling)
     if fused_ok and hasattr(objective, "prepare"):
         cache = objective.prepare(state, payloads, valid)
     if cache is not None:
@@ -163,6 +191,39 @@ def greedy(objective, ids: jax.Array, payloads: jax.Array, valid: jax.Array,
         unroll=flags.scan_unroll())
     return Solution(out_ids, out_pay, out_valid, objective.value(state),
                     evals)
+
+
+def _sample_candidates(key: jax.Array, k: int, n: int,
+                       sample: int) -> jax.Array:
+    """(k, sample) stochastic-greedy candidate draws, each step WITHOUT
+    replacement. `jax.random.randint` sampled with replacement, which
+    shrinks the effective per-step subset below `sample` (expected
+    distinct count n·(1−(1−1/n)^s) < s) and with it the (1−1/e−ε)
+    guarantee's ε; `choice(replace=False)` restores the paper's uniform
+    s-subset."""
+    draw = lambda kk: jax.random.choice(kk, n, (sample,), replace=False)
+    return jax.vmap(draw)(jax.random.split(key, k))
+
+
+def _finalize_mega(objective, mega, ids, payloads, valid, k) -> Solution:
+    """Assemble a Solution from the megakernel's per-step outputs.
+
+    mega: (final_state, bests (k,) i32 with −1 = rejected step, gains).
+    The kernel applied the same accept rule (gain > 0) and mask updates
+    as the scan engines, so ids/payloads/valid are pure gathers; evals
+    reproduces the scan's count — every step evaluates all currently
+    valid, unselected candidates."""
+    state, bests, _gains = mega
+    ok = bests >= 0
+    safe = jnp.maximum(bests, 0)
+    out_ids = jnp.where(ok, jnp.take(ids, safe), -1)
+    out_pay = jax.tree.map(
+        lambda p: jnp.where(ok.reshape((k,) + (1,) * (p.ndim - 1)),
+                            jnp.take(p, safe, axis=0), 0), payloads)
+    total = jnp.sum(valid.astype(jnp.int32))
+    accepted_before = jnp.cumsum(ok.astype(jnp.int32)) - ok.astype(jnp.int32)
+    evals = jnp.sum(total - accepted_before)
+    return Solution(out_ids, out_pay, ok, objective.value(state), evals)
 
 
 def _greedy_fused(objective, state, cache, ids, payloads, valid, k,

@@ -17,12 +17,17 @@ RandGreedi is the single-axis special case; the sequential Greedy baseline
 is `core.greedy.greedy` on an unsharded array.
 
 Every Greedy call here (leaves AND accumulation nodes) runs through the
-fused cached-matrix engine when it fits (greedy(engine='auto'), DESIGN
-§Perf): the leaf cache is (n/m)×(n/m) and the accumulation-node cache is
-only (b·k + augment)×(b·k), so internal nodes essentially always take the
-fused path, while huge leaf partitions degrade gracefully to the per-step
-kernels via the ops.fused_plan memory gate — the paper's whole point is
-respecting per-machine memory limits (§6.1/§6.4).
+fastest fitting engine (greedy(engine='auto'), DESIGN §Perf): the leaf
+cache is (n/m)×(n/m) — streaming megakernel (2 dispatches) when it fits
+the HBM budget, per-step kernels when not — while the accumulation-node
+working set is only (b·k + augment)×(b·k), which fits VMEM whole, so
+internal nodes default to the RESIDENT megakernel tier: the entire
+node-local greedy (pairwise matrix built on-chip + all k steps) is ONE
+kernel dispatch, where launch overhead would otherwise dominate the tiny
+matrix. Huge leaf partitions degrade gracefully via the ops.fused_plan
+memory gate — the paper's whole point is respecting per-machine memory
+limits (§6.1/§6.4). ``node_engine`` overrides the accumulation-node
+engine independently of the leaves.
 """
 from __future__ import annotations
 
@@ -74,13 +79,19 @@ def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
                       radices: Sequence[int],
                       augment: Optional[jax.Array] = None,
                       sample_leaf: int = 0, sample_level: int = 0,
-                      engine: str = "auto"):
+                      engine: str = "auto",
+                      node_engine: Optional[str] = None):
     """Returns the per-lane SPMD function (for use inside shard_map).
 
     ``sample_leaf`` / ``sample_level``: stochastic-greedy sampling at the
     leaves / accumulation nodes (Mirzasoleiman et al. 2015).
-    ``engine``: inner-loop selection engine for every Greedy call
-    ('auto' = fused cached-matrix when it fits the memory budget)."""
+    ``engine``: inner-loop selection engine for the leaf Greedy calls
+    ('auto' = fastest fitting tier per ops.fused_plan).
+    ``node_engine``: engine for the accumulation-node Greedy calls;
+    default None inherits ``engine`` — with 'auto' the (b·k + A)×(b·k)
+    node shape lands on the VMEM-resident megakernel tier, one dispatch
+    per node."""
+    node_engine = node_engine or engine
 
     def fn(ids, payloads, valid, *aug):
         # ---- leaves: Greedy on the local random partition ------------------
@@ -109,7 +120,8 @@ def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
                     _machine_flat_id(tree_axes, radices))
             s_new = greedy(objective, u_ids, u_pay, u_val, k,
                            ground=ground, ground_valid=ground_valid,
-                           sample=sample_level, key=lvl_key, engine=engine)
+                           sample=sample_level, key=lvl_key,
+                           engine=node_engine)
             prev_score = replay_value(objective, s_prev.payloads,
                                       s_prev.valid, ground, ground_valid)
             s_prev = select_better(
@@ -126,7 +138,8 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
                          tree_axes: Sequence[str],
                          augment: Optional[jax.Array] = None,
                          sample_leaf: int = 0, sample_level: int = 0,
-                         engine: str = "auto") -> Solution:
+                         engine: str = "auto",
+                         node_engine: Optional[str] = None) -> Solution:
     """Run distributed GreedyML over `mesh`.
 
     ids/payloads/valid: leading dim n sharded over `tree_axes` (outermost
@@ -143,7 +156,8 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
         args.append(augment)
     fn = greedyml_shmap_fn(objective, k, tree_axes, radices,
                            sample_leaf=sample_leaf,
-                           sample_level=sample_level, engine=engine)
+                           sample_level=sample_level, engine=engine,
+                           node_engine=node_engine)
     out = shard_map(fn, mesh=mesh,
                     in_specs=tuple(in_specs),
                     out_specs=Solution(P(), P(), P(), P(), P()),
@@ -153,11 +167,13 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
 
 def randgreedi_distributed(objective, ids, payloads, valid, k, mesh,
                            machine_axes: Sequence[str],
-                           augment=None, engine: str = "auto") -> Solution:
+                           augment=None, engine: str = "auto",
+                           node_engine: Optional[str] = None) -> Solution:
     """RandGreedi = GreedyML with a single accumulation level: all machine
     axes form ONE level (gather everything to every lane, one global
     Greedy). Implemented by flattening the axes tuple into one level."""
     radices = [math.prod(mesh.shape[a] for a in machine_axes)]
+    node_eng = node_engine or engine
 
     def fn(ids_, payloads_, valid_, *aug):
         s_leaf = greedy(objective, ids_, payloads_, valid_, k,
@@ -174,7 +190,7 @@ def randgreedi_distributed(objective, ids, payloads, valid, k, mesh,
                 [u_val, jnp.ones(aug[0][0].shape[0], bool)], axis=0)
         s_new = greedy(objective, u_ids, u_pay, u_val, k,
                        ground=ground, ground_valid=ground_valid,
-                       engine=engine)
+                       engine=node_eng)
         prev_score = replay_value(objective, s_leaf.payloads, s_leaf.valid,
                                   ground, ground_valid)
         s_prev = select_better(

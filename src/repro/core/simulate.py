@@ -94,7 +94,13 @@ def run_tree_dense(objective_name: str, payloads: np.ndarray, k: int,
                    tree: AccumulationTree, seed: int = 0, *,
                    universe: int = 0, augment: int = 0,
                    backend: Optional[str] = None,
-                   engine: str = "auto") -> SimResult:
+                   engine: str = "auto",
+                   node_engine: Optional[str] = None) -> SimResult:
+    """``engine`` drives the leaf Greedy calls; ``node_engine`` (default:
+    inherit) the accumulation nodes — under 'auto' the (b·k + A)×(b·k)
+    node shape lands on the megakernel's VMEM-resident tier, one kernel
+    dispatch per internal node (DESIGN §Perf)."""
+    node_engine = node_engine or engine
     n = payloads.shape[0]
     m, b, L = tree.m, tree.b, tree.num_levels
     obj = make_objective(objective_name, universe=universe, backend=backend)
@@ -165,7 +171,7 @@ def run_tree_dense(objective_name: str, payloads: np.ndarray, k: int,
             else:
                 ground, gval = pay, val
             s_new = greedy(obj, ids, pay, val, k, ground=ground,
-                           ground_valid=gval, engine=engine)
+                           ground_valid=gval, engine=node_engine)
             return s_new, ground, gval
 
         args = [jnp.asarray(u_ids), jnp.asarray(u_pay), jnp.asarray(u_val)]

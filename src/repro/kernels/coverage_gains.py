@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tpu_compat import compiler_params
+
 F32 = jnp.float32
 U32 = jnp.uint32
 
@@ -56,6 +58,8 @@ def coverage_gains_pallas(cand_bits: jax.Array, covered: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, TILE_C), lambda ci, wi: (0, ci)),
         out_shape=jax.ShapeDtypeStruct((1, c), F32),
+        # candidate dim parallel; universe-word dim accumulates (arbitrary)
+        compiler_params=compiler_params("parallel", "arbitrary"),
         interpret=interpret,
     )(cand_bits, covered.reshape(1, w))
     return out[0]

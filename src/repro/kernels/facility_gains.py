@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tpu_compat import compiler_params
+
 F32 = jnp.float32
 
 TILE_N = 256
@@ -60,6 +62,8 @@ def facility_gains_pallas(ground: jax.Array, curmax: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, TILE_C), lambda ci, ni: (0, ci)),
         out_shape=jax.ShapeDtypeStruct((1, c), F32),
+        # candidate dim parallel; inner N dim accumulates (arbitrary)
+        compiler_params=compiler_params("parallel", "arbitrary"),
         interpret=interpret,
     )(ground, curmax.reshape(1, n), cands)
     return out[0]

@@ -29,9 +29,39 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tpu_compat import compiler_params
+
 F32 = jnp.float32
 
 _NEG_INF = float("-inf")
+
+
+# Shared step primitives — also the building blocks of the whole-greedy
+# megakernel (kernels/greedy_loop.py), which must be bit-identical to this
+# per-step kernel so the engines select the same elements.
+
+
+def fold_winner(row, col, prev, mode: str):
+    """Deferred update: fold the previous winner's column into the state
+    row; prev < 0 (no accepted winner yet) is a no-op."""
+    upd = jnp.minimum(row, col) if mode == "min" else jnp.maximum(row, col)
+    return jnp.where(prev >= 0, upd, row)
+
+
+def partial_gains(row, m, mode: str):
+    """(1, BN) state row × (BN, C) matrix block → (1, C) relu-sum partials."""
+    part = (jnp.maximum(row.T - m, 0.0) if mode == "min"
+            else jnp.maximum(m - row.T, 0.0))          # (BN, C)
+    return jnp.sum(part, axis=0, keepdims=True)
+
+
+def masked_argmax(gains, mask):
+    """(1, C) gains + 0/1 mask → (first argmax () i32, max gain () f32)."""
+    g = jnp.where(mask > 0, gains, _NEG_INF)
+    mx = jnp.max(g)
+    cols = jax.lax.broadcasted_iota(jnp.int32, g.shape, 1)
+    first = jnp.min(jnp.where(g == mx, cols, jnp.int32(2 ** 30)))
+    return first, mx
 
 
 def _kernel(prev_ref, mat_ref, row_ref, mask_ref,
@@ -45,27 +75,20 @@ def _kernel(prev_ref, mat_ref, row_ref, mask_ref,
     # 1. deferred update: fold the previous winner's column into the state
     col = jax.lax.dynamic_slice(m, (0, jnp.maximum(prev, 0)),
                                 (m.shape[0], 1)).T     # (1, BN)
-    upd = jnp.minimum(r, col) if mode == "min" else jnp.maximum(r, col)
-    new_r = jnp.where(prev >= 0, upd, r)
+    new_r = fold_winner(r, col, prev, mode)
     newrow_ref[...] = new_r
 
     # 2. partial gains for this row block, accumulated on-chip
-    part = (jnp.maximum(new_r.T - m, 0.0) if mode == "min"
-            else jnp.maximum(m - new_r.T, 0.0))        # (BN, C)
-
     @pl.when(ni == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.sum(part, axis=0, keepdims=True)
+    acc_ref[...] += partial_gains(new_r, m, mode)
 
     # 3. masked argmax at the final grid step — scalars out, no (1, C) row
     @pl.when(ni == pl.num_programs(0) - 1)
     def _argmax():
-        g = jnp.where(mask_ref[...] > 0, acc_ref[...], _NEG_INF)   # (1, C)
-        mx = jnp.max(g)
-        cols = jax.lax.broadcasted_iota(jnp.int32, g.shape, 1)
-        first = jnp.min(jnp.where(g == mx, cols, jnp.int32(2 ** 30)))
+        first, mx = masked_argmax(acc_ref[...], mask_ref[...])
         best_ref[0, 0] = first
         gain_ref[0, 0] = mx
 
@@ -104,6 +127,9 @@ def fused_step_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
             jax.ShapeDtypeStruct((1, 1), F32),
         ],
         scratch_shapes=[pltpu.VMEM((1, c), F32)],
+        # the row-block dim carries the gains accumulator + end-of-grid
+        # argmax, so it is order-dependent
+        compiler_params=compiler_params("arbitrary"),
         interpret=interpret,
     )(prev.reshape(1, 1).astype(jnp.int32), mat, row.reshape(1, n), mask.reshape(1, c))
     return new_row[0], best[0, 0], gain[0, 0]

@@ -1,0 +1,210 @@
+"""Pallas TPU megakernel: the ENTIRE k-step greedy selection in one dispatch.
+
+The fused engine (kernels/fused_step.py) cut a greedy invocation from 3k to
+k+1 kernel calls, but still pays one dispatch per selection step and a full
+HBM round-trip of the (N,) state row between steps. This kernel fuses the
+loop itself: the step dimension becomes the OUTER, order-dependent grid
+dimension, and the selection state — state row, candidate mask, gains
+accumulator, previous winner — lives in VMEM/SMEM scratch ACROSS grid
+iterations, so the whole selection is one `pallas_call`. Two tiers:
+
+  * **streaming** — grid `(k + 1, N/BN)`: each step re-reads the cached
+    (N, C) matrix from HBM block by block (the only HBM traffic), while the
+    state row persists in a (N/BN, BN) VMEM scratch, the evolving candidate
+    mask and gains accumulator in (1, C) VMEM scratch, and the previous
+    winner in SMEM. Step s folds the winner of step s−1 into the row
+    (deferred update), accumulates masked relu gains per block, argmaxes
+    on-chip at the last block, and records `(best, gain)`; grid step k only
+    flushes the final winner fold and writes the row out. 2 dispatches per
+    greedy: pairwise prepare + this loop.
+
+  * **resident** — a single program (no grid) for matrices that fit VMEM
+    whole: the kernel takes the (N, D)/(C, D) FEATURE blocks, builds the
+    distance/similarity matrix on-chip (one MXU matmul), and runs the k-step
+    loop as a `fori_loop` over the VMEM-resident matrix. This is exactly the
+    accumulation-node shape of the GreedyML tree — (b·k + A)×(b·k) — making
+    every internal node a SINGLE dispatch, where launch overhead is the
+    runtime.
+
+Selection semantics are bit-identical to the fused/step engines (same
+fold → relu-sum → first-argmax primitives from fused_step.py, same
+`gain > 0` accept rule): a rejected step leaves the state and mask
+untouched and emits best = −1, exactly like the host-side scan.
+
+Modes mirror fused_step: 'min' (k-medoid, state = mind) and 'max'
+(facility, state = curmax). Gains emitted are RAW masked relu sums —
+callers normalize by the valid ground count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_step import fold_winner, masked_argmax, partial_gains
+from repro.kernels.pairwise import pairwise_block
+from repro.kernels.tpu_compat import compiler_params
+
+F32 = jnp.float32
+
+
+def _stream_kernel(mat_ref, row_ref, mask_ref,
+                   rowout_ref, best_ref, gain_ref,
+                   rows_ref, msk_ref, acc_ref, prev_ref, *, mode: str):
+    s = pl.program_id(0)                    # selection step (sequential)
+    ni = pl.program_id(1)                   # row block within a step
+    k = pl.num_programs(0) - 1              # last grid step only flushes
+    nb = pl.num_programs(1)
+
+    @pl.when((s == 0) & (ni == 0))
+    def _init_selection():
+        msk_ref[...] = mask_ref[...]
+        prev_ref[0] = -1
+
+    @pl.when(s == 0)
+    def _init_row_block():
+        rows_ref[pl.ds(ni, 1), :] = row_ref[...]
+
+    m = mat_ref[...].astype(F32)                        # (BN, C)
+    prev = prev_ref[0]
+
+    # deferred update: fold the previous step's winner into this row block
+    col = jax.lax.dynamic_slice(m, (0, jnp.maximum(prev, 0)),
+                                (m.shape[0], 1)).T      # (1, BN)
+    r = fold_winner(rows_ref[pl.ds(ni, 1), :], col, prev, mode)
+    rows_ref[pl.ds(ni, 1), :] = r
+
+    @pl.when(s < k)
+    def _select():
+        @pl.when(ni == 0)
+        def _zero():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += partial_gains(r, m, mode)
+
+        @pl.when(ni == nb - 1)
+        def _argmax():
+            best, mx = masked_argmax(acc_ref[...], msk_ref[...])
+            accept = mx > 0.0
+            best_i = jnp.where(accept, best, jnp.int32(-1))
+            best_ref[0, 0] = best_i
+            gain_ref[0, 0] = mx
+            cols = jax.lax.broadcasted_iota(jnp.int32, msk_ref.shape, 1)
+            msk_ref[...] = jnp.where(accept & (cols == best), 0.0,
+                                     msk_ref[...])
+            prev_ref[0] = best_i
+
+    @pl.when(s == k)
+    def _flush():
+        rowout_ref[...] = r
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "mode", "block_n", "interpret"))
+def greedy_loop_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
+                       k: int, mode: str = "min", block_n: int = 256,
+                       interpret: bool = False):
+    """Streaming tier. mat: (N, C) cached matrix (f32 or bf16 storage, f32
+    accumulate); row: (1, N) state; mask: (1, C) 0/1 f32.
+
+    Returns (final_row (N,), bests (k,) i32 with −1 = rejected step,
+    gains (k,) f32 raw relu sums). N, C padded by the ops.py wrapper.
+    """
+    n, c = mat.shape
+    assert n % block_n == 0 and c % 128 == 0, (n, c, block_n)
+    nb = n // block_n
+    row_out, best, gain = pl.pallas_call(
+        functools.partial(_stream_kernel, mode=mode),
+        grid=(k + 1, nb),
+        in_specs=[
+            pl.BlockSpec((block_n, c), lambda s, ni: (ni, 0)),
+            pl.BlockSpec((1, block_n), lambda s, ni: (0, ni)),
+            pl.BlockSpec((1, c), lambda s, ni: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda s, ni: (0, ni)),
+            pl.BlockSpec((1, 1), lambda s, ni: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, ni: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), F32),
+            jax.ShapeDtypeStruct((k + 1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((k + 1, 1), F32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nb, block_n), F32),    # state row, all blocks
+            pltpu.VMEM((1, c), F32),           # evolving candidate mask
+            pltpu.VMEM((1, c), F32),           # gains accumulator
+            pltpu.SMEM((1,), jnp.int32),       # previous winner
+        ],
+        # both dims are order-dependent: steps are sequential by definition,
+        # and the row-block dim carries the accumulator + mask/prev updates
+        compiler_params=compiler_params("arbitrary", "arbitrary"),
+        interpret=interpret,
+    )(mat, row, mask)
+    return row_out[0], best[:k, 0], gain[:k, 0]
+
+
+def _resident_kernel(ground_ref, cands_ref, row_ref, mask_ref,
+                     rowout_ref, best_ref, gain_ref, *,
+                     k: int, pw_mode: str, mode: str):
+    g = ground_ref[...].astype(F32)                     # (N, D)
+    cd = cands_ref[...].astype(F32)                     # (C, D)
+    m = pairwise_block(g, cd, pw_mode)                  # (N, C), on-chip
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, m.shape[1]), 1)
+    steps = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+
+    def body(s, carry):
+        row, mask, prev, bests, gains = carry
+        col = jax.lax.dynamic_slice(m, (0, jnp.maximum(prev, 0)),
+                                    (m.shape[0], 1)).T  # (1, N)
+        row = fold_winner(row, col, prev, mode)
+        best, mx = masked_argmax(partial_gains(row, m, mode), mask)
+        accept = mx > 0.0
+        best_i = jnp.where(accept, best, jnp.int32(-1))
+        mask = jnp.where(accept & (cols == best), 0.0, mask)
+        sel = steps == s
+        return (row, mask, best_i,
+                jnp.where(sel, best_i, bests), jnp.where(sel, mx, gains))
+
+    carry = (row_ref[...].astype(F32), mask_ref[...].astype(F32),
+             jnp.int32(-1),
+             jnp.full((1, k), -1, jnp.int32), jnp.zeros((1, k), F32))
+    row, _, prev, bests, gains = jax.lax.fori_loop(0, k, body, carry)
+    # flush: fold the final accepted winner so value(state) sees all of S
+    col = jax.lax.dynamic_slice(m, (0, jnp.maximum(prev, 0)),
+                                (m.shape[0], 1)).T
+    rowout_ref[...] = fold_winner(row, col, prev, mode)
+    best_ref[...] = bests
+    gain_ref[...] = gains
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "pw_mode", "mode", "interpret"))
+def greedy_loop_resident_pallas(ground: jax.Array, cands: jax.Array,
+                                row: jax.Array, mask: jax.Array, k: int,
+                                pw_mode: str = "dist", mode: str = "min",
+                                interpret: bool = False):
+    """Resident tier: ONE dispatch builds the matrix on-chip and runs all k
+    steps. ground: (N, D), cands: (C, D), row: (1, N), mask: (1, C); the
+    whole working set — features, (N, C) matrix, relu partials — must fit
+    VMEM (gated by ops.fused_plan's resident check). pw_mode: 'dist'
+    (k-medoid) | 'dot' (facility). Returns as greedy_loop_pallas.
+    """
+    n, d = ground.shape
+    c = cands.shape[0]
+    assert cands.shape[1] == d and row.shape == (1, n) and mask.shape == (1, c)
+    row_out, best, gain = pl.pallas_call(
+        functools.partial(_resident_kernel, k=k, pw_mode=pw_mode, mode=mode),
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), F32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), F32),
+        ],
+        interpret=interpret,
+    )(ground, cands, row, mask)
+    return row_out[0], best[0], gain[0]

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tpu_compat import compiler_params
+
 F32 = jnp.float32
 
 TILE_N = 256
@@ -77,6 +79,10 @@ def kmedoid_gains_pallas(ground: jax.Array, mind: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, TILE_C), lambda ci, ni: (0, ci)),
         out_shape=jax.ShapeDtypeStruct((1, c), F32),
+        # candidate blocks are independent (parallel); the inner N dim
+        # accumulates into the revisited output block (arbitrary), which
+        # Mosaic can still software-pipeline
+        compiler_params=compiler_params("parallel", "arbitrary"),
         interpret=interpret,
     )(ground, mind.reshape(1, n), cands)
     return out[0]

@@ -19,8 +19,12 @@ applied OUTSIDE the kernels so they never become static compile keys.
 Fused selection engine (DESIGN §Perf): ``pairwise_matrix`` computes the
 (N, C) cached matrix once per greedy invocation; ``fused_step`` performs one
 selection step over it (deferred winner-column update + masked gains +
-on-chip argmax); ``fused_plan`` is the static memory-budget gate that tells
-callers whether the cached engine fits (else: per-step fallback).
+on-chip argmax); ``greedy_loop`` / ``greedy_loop_resident`` run the ENTIRE
+k-step selection in one dispatch (the whole-greedy megakernel);
+``fused_plan`` is the static three-way memory gate — resident / streaming /
+per-step fallback — with a bf16 cache-storage option (f32 accumulate) that
+doubles the HBM headroom before the paper's memory-capped fallback
+triggers.
 """
 from __future__ import annotations
 
@@ -37,6 +41,8 @@ from repro.kernels.coverage_gains import (TILE_C as COV_TC, TILE_W,
                                           coverage_gains_pallas)
 from repro.kernels.facility_gains import facility_gains_pallas
 from repro.kernels.fused_step import fused_step_pallas
+from repro.kernels.greedy_loop import (greedy_loop_pallas,
+                                       greedy_loop_resident_pallas)
 from repro.kernels.kmedoid_gains import (TILE_C, TILE_N,
                                          kmedoid_gains_pallas)
 from repro.kernels.pairwise import pairwise_pallas
@@ -48,8 +54,14 @@ _BIG = 3.0e38  # padding curmax sentinel (≈ f32 max; keeps inc at exactly 0)
 # memory budgets for the fused engine (overridable for tests/small hosts)
 _CACHE_MB_ENV = "REPRO_FUSED_CACHE_MB"   # HBM budget for the (N, C) matrix
 _VMEM_MB_ENV = "REPRO_FUSED_VMEM_MB"     # per-block VMEM budget
+_CACHE_DTYPE_ENV = "REPRO_FUSED_CACHE_DTYPE"  # auto | f32 | bf16
 _CACHE_MB_DEFAULT = 2048.0
 _VMEM_MB_DEFAULT = 8.0
+
+# resident-tier padding: accumulation-node shapes drift level by level, so
+# the ground-row axis buckets from a small base to keep the matrix (and the
+# compile cache) tight
+RES_TILE_N = 8
 
 
 def _backend(override: Optional[str]) -> str:
@@ -150,69 +162,153 @@ def fused_replicas(n: int):
         _VMAP_REPLICAS = old
 
 
-def fused_block_n(n_pad: int, c_pad: int) -> int:
+def _cache_dtype_pref() -> str:
+    v = os.environ.get(_CACHE_DTYPE_ENV, "auto").lower()
+    return v if v in ("auto", "f32", "bf16") else "auto"
+
+
+def fused_block_n(n_pad: int, c_pad: int, itemsize: int = 4) -> int:
     """Largest power-of-two row-block (≤256) whose fused-step working set
     fits the VMEM budget; 0 if none fits.
 
-    Working set: the (BN, C) matrix slab, the (BN, C) relu-partials
-    temporary the kernel materializes, the (1, C) gains accumulator and
-    mask blocks, and two (1, BN) state rows.
+    Working set: the (BN, C) matrix slab (cache storage dtype), the
+    (BN, C) f32 relu-partials temporary the kernel materializes, the
+    (1, C) gains accumulator and mask blocks, and two (1, BN) state rows.
+    bf16 storage floors BN at its (16, 128) min tile.
     """
     vmem = _budget_mb(_VMEM_MB_ENV, _VMEM_MB_DEFAULT) * 2 ** 20
+    bn_min = 16 if itemsize == 2 else 8
     bn = 256
-    while bn >= 8:
+    while bn >= bn_min:
         if (bn <= n_pad
-                and (2 * bn * c_pad + 3 * c_pad + 2 * bn) * 4 <= vmem):
+                and (bn * c_pad * itemsize
+                     + (bn * c_pad + 3 * c_pad + 2 * bn) * 4) <= vmem):
             return bn
         bn //= 2
     return 0
 
 
-def fused_plan(n: int, c: int, backend=None) -> Optional[dict]:
-    """Static (trace-time) memory gate for the cached-matrix engine.
+def loop_block_n(n_pad: int, c_pad: int, itemsize: int = 4) -> int:
+    """Row block for the STREAMING megakernel tier; 0 if none fits.
 
-    Returns {'block_n': int} when an (n, c) cached matrix fits the HBM
-    budget (and, for Pallas backends, a VMEM-feasible row block exists);
-    None means the caller must use the per-step engine — the paper's
-    memory-capped regime (§6.4) where N×C exceeds the machine budget.
+    Same per-block working set as fused_block_n plus the loop's persistent
+    scratch: the full (N/BN, BN) state row, the evolving (1, C) candidate
+    mask, and the (1, C) gains accumulator."""
+    vmem = _budget_mb(_VMEM_MB_ENV, _VMEM_MB_DEFAULT) * 2 ** 20
+    bn_min = 16 if itemsize == 2 else 8
+    bn = 256
+    while bn >= bn_min:
+        if (bn <= n_pad
+                and (bn * c_pad * itemsize
+                     + (bn * c_pad + 4 * c_pad + n_pad + 2 * bn) * 4)
+                <= vmem):
+            return bn
+        bn //= 2
+    return 0
+
+
+def resident_fits(n_pad: int, c_pad: int, d_pad: int) -> bool:
+    """Whole-matrix VMEM residency check for the megakernel's resident
+    tier: (N, D)/(C, D) feature blocks, the on-chip (N, C) matrix, the
+    (N, C) relu-partials temporary, and the state/mask/gains rows — all
+    f32 (the matrix is built in-kernel; cache storage dtype is moot)."""
+    vmem = _budget_mb(_VMEM_MB_ENV, _VMEM_MB_DEFAULT) * 2 ** 20
+    need = 4 * (n_pad * d_pad + c_pad * d_pad
+                + 2 * n_pad * c_pad
+                + 4 * c_pad + 4 * n_pad)
+    return need <= vmem
+
+
+def fused_plan(n: int, c: int, d: Optional[int] = None,
+               backend=None) -> Optional[dict]:
+    """Static (trace-time) three-way memory gate for the cached-matrix
+    engines (DESIGN §Perf).
+
+    Returns None when no (n, c) matrix fits the cache budget in any
+    permitted storage dtype — the paper's memory-capped regime (§6.4)
+    where callers must use the per-step engine. Otherwise a dict:
+
+      tier         'resident'  — the whole working set fits VMEM (requires
+                                 d); the megakernel builds the matrix
+                                 on-chip and the greedy is ONE dispatch
+                   'streaming' — cache in HBM, loop kernel re-reads it per
+                                 step; greedy is TWO dispatches
+                   'fused'     — cache fits HBM but the loop scratch does
+                                 not: per-step fused kernels only (k+1)
+      block_n      row block for the per-step fused kernel (0 on ref)
+      loop_block_n row block for the streaming loop kernel (0 unless
+                   tier == 'streaming' on a Pallas backend)
+      dtype        cache storage dtype, 'float32' | 'bfloat16' (bf16 is
+                   chosen when f32 busts the budget — or forced via
+                   REPRO_FUSED_CACHE_DTYPE — doubling HBM headroom;
+                   kernels accumulate in f32 either way)
     """
     b = _backend(backend)
     if b == "ref":
         n_pad, c_pad = n, c
+        n_res, d_pad = n, d
     else:
         n_pad, c_pad = _bucket_len(n, 256), _bucket_len(c, 128)
+        # the resident kernel pads its ground axis from the smaller
+        # RES_TILE_N base — gate it on what it will actually allocate
+        n_res = _bucket_len(n, RES_TILE_N)
+        d_pad = -(-d // 128) * 128 if d else None
     cache = _budget_mb(_CACHE_MB_ENV, _CACHE_MB_DEFAULT) * 2 ** 20
-    if n_pad * c_pad * 4 * _VMAP_REPLICAS > cache:
+    pref = _cache_dtype_pref()
+    dtype, itemsize = None, 4
+    for cand, size in (("float32", 4), ("bfloat16", 2)):
+        if (pref, cand) in (("bf16", "float32"), ("f32", "bfloat16")):
+            continue
+        if n_pad * c_pad * size * _VMAP_REPLICAS <= cache:
+            dtype, itemsize = cand, size
+            break
+    if dtype is None:
         return None
+    resident = d_pad is not None and resident_fits(n_res, c_pad, d_pad)
     if b == "ref":
-        return {"block_n": 0}
-    bn = fused_block_n(n_pad, c_pad)
-    return {"block_n": bn} if bn else None
+        return {"tier": "resident" if resident else "streaming",
+                "block_n": 0, "loop_block_n": 0, "dtype": dtype}
+    bn = fused_block_n(n_pad, c_pad, itemsize)
+    if resident:
+        return {"tier": "resident", "block_n": bn, "loop_block_n": 0,
+                "dtype": dtype}
+    if bn == 0:
+        return None
+    bn_loop = loop_block_n(n_pad, c_pad, itemsize)
+    return {"tier": "streaming" if bn_loop else "fused",
+            "block_n": bn, "loop_block_n": bn_loop, "dtype": dtype}
 
 
-def pairwise_matrix(ground, cands, mode: str = "dist", backend=None):
+def pairwise_matrix(ground, cands, mode: str = "dist", backend=None,
+                    dtype: str = "float32"):
     """(N, D) × (C, D) → cached matrix ('dist' or 'dot').
 
     Pallas backends return the BUCKET-PADDED (N_pad, C_pad) matrix (padding
     rows/cols carry junk that downstream masks neutralize); the ref backend
     returns the logical (N, C). `fused_step`/`apply_column`/`masked_col_*`
-    accept either.
+    accept either. ``dtype`` is the cache STORAGE dtype from the plan
+    ('bfloat16' halves HBM footprint; every consumer accumulates in f32).
     """
     b = _backend(backend)
     if b == "ref":
-        return (ref.pairwise_dist(ground, cands) if mode == "dist"
-                else ref.pairwise_sim(ground, cands))
+        m = (ref.pairwise_dist(ground, cands) if mode == "dist"
+             else ref.pairwise_sim(ground, cands))
+        return m if dtype == "float32" else m.astype(jnp.dtype(dtype))
     g = _pad_to(_pad_to(ground, 0, 256), 1, 128, bucket=False)
     cd = _pad_to(_pad_to(cands, 0, 128), 1, 128, bucket=False)
-    return pairwise_pallas(g, cd, mode=mode, interpret=(b == "interpret"))
+    return pairwise_pallas(g, cd, mode=mode, out_dtype=dtype,
+                           interpret=(b == "interpret"))
 
 
-def fused_step(mat, row, mask, prev, mode: str = "min", backend=None):
+def fused_step(mat, row, mask, prev, mode: str = "min", backend=None,
+               plan: Optional[dict] = None):
     """One fused greedy step over the cached matrix.
 
     mat: (N[, _pad], C[, _pad]) from `pairwise_matrix`; row: (n,) state
     (mind/curmax); mask: (c,) bool candidate mask; prev: () int32 previous
     winner (-1 = none). Returns (new_row (n,), best () int32, raw_gain ()).
+    ``plan``: the fused_plan dict, threaded through by callers so the row
+    block is not re-derived on every one of the k calls.
     """
     b = _backend(backend)
     n, c = row.shape[0], mask.shape[0]
@@ -223,7 +319,8 @@ def fused_step(mat, row, mask, prev, mode: str = "min", backend=None):
     pad_val = 0.0 if mode == "min" else _BIG
     r = _pad_to(row.astype(F32), 0, n_pad, value=pad_val, bucket=False)
     mk = _pad_to(mask.astype(F32), 0, c_pad, bucket=False)
-    bn = fused_block_n(n_pad, c_pad)
+    bn = (plan or {}).get("block_n") or fused_block_n(n_pad, c_pad,
+                                                      mat.dtype.itemsize)
     assert bn, "fused_step called without a feasible plan (use fused_plan)"
     new_row, best, gain = fused_step_pallas(mat, r, mk, prev, mode=mode,
                                             block_n=bn,
@@ -231,11 +328,70 @@ def fused_step(mat, row, mask, prev, mode: str = "min", backend=None):
     return new_row[:n], best, gain
 
 
+def greedy_loop(mat, row, mask, k: int, mode: str = "min", backend=None,
+                plan: Optional[dict] = None):
+    """STREAMING megakernel tier: the entire k-step greedy over an
+    HBM-cached matrix in ONE dispatch (kernels/greedy_loop.py).
+
+    mat: (N[, _pad], C[, _pad]) from `pairwise_matrix`; row: (n,) state;
+    mask: (c,) bool/0-1 candidate mask. Returns (final_row (n,), bests
+    (k,) i32 with −1 = rejected step, raw gains (k,) f32).
+    """
+    b = _backend(backend)
+    n, c = row.shape[0], mask.shape[0]
+    if b == "ref":
+        return ref.greedy_loop(mat, row.astype(F32), mask.astype(F32), k,
+                               mode=mode)
+    n_pad, c_pad = mat.shape
+    pad_val = 0.0 if mode == "min" else _BIG
+    r = _pad_to(row.astype(F32), 0, n_pad, value=pad_val,
+                bucket=False).reshape(1, n_pad)
+    mk = _pad_to(mask.astype(F32), 0, c_pad, bucket=False).reshape(1, c_pad)
+    bn = (plan or {}).get("loop_block_n") or loop_block_n(
+        n_pad, c_pad, mat.dtype.itemsize)
+    assert bn, "greedy_loop called without a feasible streaming plan"
+    new_row, bests, gains = greedy_loop_pallas(mat, r, mk, k, mode=mode,
+                                               block_n=bn,
+                                               interpret=(b == "interpret"))
+    return new_row[:n], bests, gains
+
+
+def greedy_loop_resident(ground, cands, row, mask, k: int,
+                         pw_mode: str = "dist", mode: str = "min",
+                         backend=None):
+    """RESIDENT megakernel tier: pairwise matrix built ON-CHIP + all k
+    steps, one dispatch total — the accumulation-node fast path.
+
+    ground: (N, D) evaluation rows, cands: (C, D), row: (n,) state, mask:
+    (c,) candidate mask; pw_mode 'dist' (k-medoid) | 'dot' (facility).
+    Returns as `greedy_loop`. Callers gate via fused_plan(..., d=D)
+    returning tier == 'resident'.
+    """
+    b = _backend(backend)
+    n, c = row.shape[0], mask.shape[0]
+    if b == "ref":
+        mat = (ref.pairwise_dist(ground, cands) if pw_mode == "dist"
+               else ref.pairwise_sim(ground, cands))
+        return ref.greedy_loop(mat, row.astype(F32), mask.astype(F32), k,
+                               mode=mode)
+    g = _pad_to(_pad_to(ground, 0, RES_TILE_N), 1, 128, bucket=False)
+    cd = _pad_to(_pad_to(cands, 0, 128), 1, 128, bucket=False)
+    n_pad, c_pad = g.shape[0], cd.shape[0]
+    pad_val = 0.0 if mode == "min" else _BIG
+    r = _pad_to(row.astype(F32), 0, RES_TILE_N,
+                value=pad_val).reshape(1, n_pad)
+    mk = _pad_to(mask.astype(F32), 0, 128).reshape(1, c_pad)
+    new_row, bests, gains = greedy_loop_resident_pallas(
+        g, cd, r, mk, k, pw_mode=pw_mode, mode=mode,
+        interpret=(b == "interpret"))
+    return new_row[:n], bests, gains
+
+
 def apply_column(mat, row, idx, mode: str = "min"):
     """Fold column `idx` of the cached matrix into the state row (flush of
     the deferred final-step update); idx < 0 is a no-op. Pure jnp — O(N)."""
     col = lax.dynamic_slice_in_dim(mat, jnp.maximum(idx, 0), 1,
-                                   axis=1)[: row.shape[0], 0]
+                                   axis=1)[: row.shape[0], 0].astype(F32)
     upd = jnp.minimum(row, col) if mode == "min" else jnp.maximum(row, col)
     return jnp.where(idx >= 0, upd, row)
 
@@ -244,7 +400,7 @@ def masked_col_reduce(mat, col_valid, row, mode: str = "min"):
     """Batched replay: fold ALL valid columns of the cached matrix into the
     state row in one pass (replaces the sequential k-step update scan)."""
     n, c = row.shape[0], col_valid.shape[0]
-    sub = mat[:n, :c]
+    sub = mat[:n, :c].astype(F32)
     if mode == "min":
         vals = jnp.where(col_valid[None, :], sub, jnp.inf)
         return jnp.minimum(row, jnp.min(vals, axis=1))

@@ -21,29 +21,42 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tpu_compat import compiler_params
+
 F32 = jnp.float32
 
 TILE_N = 256
 TILE_C = 128
 
 
-def _kernel(ground_ref, cands_ref, out_ref, *, mode: str):
-    g = ground_ref[...].astype(F32)                    # (TN, D)
-    c = cands_ref[...].astype(F32)                     # (TC, D)
+def pairwise_block(g, c, mode: str):
+    """(TN, D) × (TC, D) feature blocks → (TN, TC) matrix block, f32.
+
+    The single source of the ‖g‖²+‖c‖²−2⟨g,c⟩ expansion — shared with the
+    resident megakernel (kernels/greedy_loop.py) so the engines stay
+    bit-identical."""
     cross = jax.lax.dot_general(g, c, (((1,), (1,)), ((), ())),
                                 preferred_element_type=F32)   # (TN, TC)
     if mode == "dot":
-        out_ref[...] = cross
-    else:
-        gn = jnp.sum(g * g, axis=1, keepdims=True)     # (TN, 1)
-        cn = jnp.sum(c * c, axis=1, keepdims=True).T   # (1, TC)
-        out_ref[...] = jnp.sqrt(jnp.maximum(gn + cn - 2.0 * cross, 0.0))
+        return cross
+    gn = jnp.sum(g * g, axis=1, keepdims=True)         # (TN, 1)
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T       # (1, TC)
+    return jnp.sqrt(jnp.maximum(gn + cn - 2.0 * cross, 0.0))
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def _kernel(ground_ref, cands_ref, out_ref, *, mode: str):
+    g = ground_ref[...].astype(F32)                    # (TN, D)
+    c = cands_ref[...].astype(F32)                     # (TC, D)
+    out_ref[...] = pairwise_block(g, c, mode).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "out_dtype", "interpret"))
 def pairwise_pallas(ground: jax.Array, cands: jax.Array, mode: str = "dist",
+                    out_dtype: str = "float32",
                     interpret: bool = False) -> jax.Array:
-    """ground: (N, D), cands: (C, D) → (N, C) fp32 matrix.
+    """ground: (N, D), cands: (C, D) → (N, C) matrix in ``out_dtype``
+    (compute always f32; 'bfloat16' halves the cache's HBM footprint).
 
     N, C, D must be padded to tile multiples by the ops.py wrapper (zero
     padding: pad rows/cols produce ‖·‖ / 0 entries that callers mask).
@@ -60,6 +73,8 @@ def pairwise_pallas(ground: jax.Array, cands: jax.Array, mode: str = "dist",
             pl.BlockSpec((TILE_C, d), lambda ni, ci: (ci, 0)),
         ],
         out_specs=pl.BlockSpec((TILE_N, TILE_C), lambda ni, ci: (ni, ci)),
-        out_shape=jax.ShapeDtypeStruct((n, c), F32),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.dtype(out_dtype)),
+        # every block is independent — Mosaic may pipeline/reorder both dims
+        compiler_params=compiler_params("parallel", "parallel"),
         interpret=interpret,
     )(ground, cands)

@@ -78,19 +78,47 @@ def fused_step(mat: jax.Array, row: jax.Array, mask: jax.Array,
     (mind for 'min'/k-medoid, curmax for 'max'/facility), then computes the
     masked relu-sum gains and their argmax. Returns (new_row, best () i32,
     best_gain () f32); best_gain is the RAW relu sum (no 1/N)."""
-    n, c = mat.shape
-    col = jax.lax.dynamic_slice_in_dim(mat, jnp.maximum(prev, 0), 1,
+    m = mat.astype(F32)                # bf16 cache storage, f32 accumulate
+    col = jax.lax.dynamic_slice_in_dim(m, jnp.maximum(prev, 0), 1,
                                        axis=1)[:, 0]
     if mode == "min":
         upd = jnp.minimum(row, col)
     else:
         upd = jnp.maximum(row, col)
     new_row = jnp.where(prev >= 0, upd, row)
-    part = (jnp.maximum(new_row[:, None] - mat, 0.0) if mode == "min"
-            else jnp.maximum(mat - new_row[:, None], 0.0))
+    part = (jnp.maximum(new_row[:, None] - m, 0.0) if mode == "min"
+            else jnp.maximum(m - new_row[:, None], 0.0))
     gains = jnp.where(mask > 0, jnp.sum(part, axis=0), -jnp.inf)
     best = jnp.argmax(gains).astype(jnp.int32)
     return new_row, best, gains[best]
+
+
+def greedy_loop(mat: jax.Array, row: jax.Array, mask: jax.Array, k: int,
+                mode: str = "min"):
+    """Oracle for the whole-greedy megakernel (kernels/greedy_loop.py): all
+    k selection steps over a cached (N, C) matrix, including the per-step
+    accept rule (gain > 0), mask update, and the final winner-column flush.
+
+    Returns (final_row (N,), bests (k,) i32 with −1 for rejected steps,
+    gains (k,) f32 raw relu sums)."""
+    c = mat.shape[1]
+    cols = jnp.arange(c, dtype=jnp.int32)
+
+    def step(carry, _):
+        row, mask, prev = carry
+        new_row, best, gain = fused_step(mat, row, mask, prev, mode=mode)
+        accept = jnp.isfinite(gain) & (gain > 0)
+        best_i = jnp.where(accept, best, jnp.int32(-1))
+        mask = jnp.where(accept & (cols == best), 0.0, mask)
+        return (new_row, mask, best_i), (best_i, gain)
+
+    (row, _, prev), (bests, gains) = jax.lax.scan(
+        step, (row.astype(F32), mask.astype(F32), jnp.int32(-1)), None,
+        length=k)
+    col = jax.lax.dynamic_slice_in_dim(mat.astype(F32),
+                                       jnp.maximum(prev, 0), 1, axis=1)[:, 0]
+    upd = jnp.minimum(row, col) if mode == "min" else jnp.maximum(row, col)
+    return jnp.where(prev >= 0, upd, row), bests, gains
 
 
 def kmedoid_update(ground: jax.Array, mind: jax.Array, chosen: jax.Array

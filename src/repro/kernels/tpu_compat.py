@@ -1,0 +1,21 @@
+"""Version-compat shims for the Pallas TPU compiler surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams`` around
+0.5; this module resolves whichever exists so kernels can declare
+``dimension_semantics`` (telling Mosaic which grid dimensions are
+reorderable/"parallel" vs order-dependent/"arbitrary" — the hint that lets
+it software-pipeline the parallel row/candidate block dimensions) without
+pinning a jax version.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_PARAMS_CLS = (getattr(pltpu, "CompilerParams", None)
+               or getattr(pltpu, "TPUCompilerParams"))
+
+
+def compiler_params(*dimension_semantics: str):
+    """CompilerParams declaring each grid dim 'parallel' or 'arbitrary'."""
+    assert all(s in ("parallel", "arbitrary") for s in dimension_semantics)
+    return _PARAMS_CLS(dimension_semantics=tuple(dimension_semantics))

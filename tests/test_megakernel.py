@@ -1,0 +1,261 @@
+"""Whole-greedy megakernel parity + tier gate (DESIGN §Perf).
+
+The megakernel engine (kernels/greedy_loop.py, `greedy(engine='mega')`)
+must select IDENTICAL ids/valid/evals to the per-step and fused engines
+for all three objectives, across ref/interpret backends, including the
+constraint-masked branch (where it falls back to the fused per-step scan)
+and the accumulation-node call shape (ground override + augment) that the
+resident tier is built for. The fused_plan three-way tier gate —
+resident / streaming / per-step fallback, with the bf16 cache storage
+option — is unit-tested under shrunken REPRO_FUSED_*_MB budgets.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.constraints import PartitionMatroid
+from repro.core.functions import make_objective
+from repro.core.greedy import _sample_candidates, greedy
+from repro.kernels import ops
+from repro.data.synthetic import gen_images, gen_kcover, pack_bitmaps
+
+
+def _points(n=300, d=48, seed=2):
+    x = jnp.asarray(gen_images(n, d, classes=8, seed=seed))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    valid = (jnp.arange(n) % 11) != 0
+    return ids, x, valid
+
+
+def _assert_same_selection(a, b, value_tol=1e-5):
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.valid), np.asarray(b.valid))
+    assert int(a.evals) == int(b.evals)
+    np.testing.assert_allclose(float(a.value), float(b.value),
+                               rtol=value_tol, atol=value_tol)
+
+
+# ---------------------------------------------------------------------------
+# selection parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("name", ["kmedoid", "facility"])
+def test_mega_matches_step_and_fused(name, backend):
+    ids, x, valid = _points()
+    obj = make_objective(name, backend=backend)
+    step = greedy(obj, ids, x, valid, 16, engine="step")
+    fused = greedy(obj, ids, x, valid, 16, engine="fused")
+    mega = greedy(obj, ids, x, valid, 16, engine="mega")
+    assert int(mega.valid.sum()) > 0
+    # value tol looser vs step: the on-chip matrix uses the
+    # ‖x‖²+‖c‖²−2⟨x,c⟩ expansion, the per-step update Σ(x−c)² directly
+    _assert_same_selection(step, mega, value_tol=1e-4)
+    _assert_same_selection(fused, mega, value_tol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("name", ["kmedoid", "facility"])
+def test_mega_streaming_tier_parity(name, backend, monkeypatch):
+    """Force the streaming tier (resident VMEM check fails) and re-check
+    parity — the loop kernel re-reads the HBM cache per step."""
+    monkeypatch.setenv("REPRO_FUSED_VMEM_MB", "0.5")
+    ids, x, valid = _points()
+    obj = make_objective(name, backend=backend)
+    plan = ops.fused_plan(x.shape[0], x.shape[0], d=x.shape[1],
+                          backend=backend)
+    assert plan["tier"] == "streaming"
+    step = greedy(obj, ids, x, valid, 16, engine="step")
+    mega = greedy(obj, ids, x, valid, 16, engine="mega")
+    _assert_same_selection(step, mega, value_tol=1e-4)
+
+
+def test_mega_coverage_falls_back_to_step():
+    n, universe = 96, 384
+    bm = jnp.asarray(pack_bitmaps(gen_kcover(n, universe, seed=1), universe))
+    ids, valid = jnp.arange(n, dtype=jnp.int32), jnp.ones(n, bool)
+    obj = make_objective("kcover", universe=universe, backend="ref")
+    a = greedy(obj, ids, bm, valid, 12, engine="step")
+    b = greedy(obj, ids, bm, valid, 12, engine="mega")
+    _assert_same_selection(a, b, value_tol=0)
+
+
+@pytest.mark.parametrize("name", ["kmedoid", "facility"])
+def test_mega_constrained_falls_back_identically(name):
+    """Constraints need a per-step feasibility mask, so engine='mega'
+    drops to the fused scan — selections must still match and respect
+    the matroid."""
+    ids, x, valid = _points()
+    n = ids.shape[0]
+    cats = jnp.asarray(np.arange(n) % 3, jnp.int32)
+    caps = jnp.asarray([3, 2, 4], jnp.int32)
+    obj = make_objective(name, backend="ref")
+    a = greedy(obj, ids, x, valid, 9, engine="step",
+               constraint=PartitionMatroid(cats, caps))
+    b = greedy(obj, ids, x, valid, 9, engine="mega",
+               constraint=PartitionMatroid(cats, caps))
+    _assert_same_selection(a, b)
+    sel = np.asarray(b.ids)[np.asarray(b.valid)]
+    counts = np.bincount(np.asarray(cats)[sel], minlength=3)
+    assert np.all(counts <= np.asarray(caps))
+
+
+def test_mega_accumulation_node_shape_resident():
+    """Accumulation-node style call (candidate pool ≠ evaluation set,
+    augment rows): the shape must land on the resident tier and match the
+    step engine."""
+    ids, x, valid = _points(n=128)
+    aug = jnp.asarray(gen_images(40, 48, classes=8, seed=9))
+    ground = jnp.concatenate([x, aug], axis=0)
+    gvalid = jnp.concatenate([valid, jnp.ones(40, bool)])
+    for backend in ("ref", "interpret"):
+        plan = ops.fused_plan(ground.shape[0], x.shape[0],
+                              d=ground.shape[1], backend=backend)
+        assert plan["tier"] == "resident"
+        for name in ("kmedoid", "facility"):
+            obj = make_objective(name, backend=backend)
+            a = greedy(obj, ids, x, valid, 12, ground=ground,
+                       ground_valid=gvalid, engine="step")
+            b = greedy(obj, ids, x, valid, 12, ground=ground,
+                       ground_valid=gvalid, engine="mega")
+            _assert_same_selection(a, b, value_tol=1e-4)
+
+
+def test_mega_interpret_matches_ref_selection():
+    ids, x, valid = _points(n=200)
+    sols = {}
+    for backend in ("ref", "interpret"):
+        obj = make_objective("facility", backend=backend)
+        sols[backend] = greedy(obj, ids, x, valid, 12, engine="mega")
+    np.testing.assert_array_equal(np.asarray(sols["ref"].ids),
+                                  np.asarray(sols["interpret"].ids))
+
+
+def test_mega_early_stop_emits_invalid_tail():
+    """k > achievable selections: rejected steps must come out valid=False
+    with id −1, exactly like the scan engines."""
+    n, d = 24, 16
+    x = jnp.asarray(gen_images(n, d, classes=4, seed=0))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    valid = jnp.arange(n) < 5                       # only 5 real candidates
+    obj = make_objective("kmedoid", backend="ref")
+    a = greedy(obj, ids, x, valid, 12, engine="step")
+    b = greedy(obj, ids, x, valid, 12, engine="mega")
+    # tiny n amplifies the sqrt-near-zero expansion-vs-direct noise
+    _assert_same_selection(a, b, value_tol=5e-3)
+    assert int(b.valid.sum()) <= 5
+    assert np.all(np.asarray(b.ids)[np.asarray(~b.valid)] == -1)
+
+
+# ---------------------------------------------------------------------------
+# tier gate
+# ---------------------------------------------------------------------------
+
+
+def test_plan_tiers_by_shape():
+    # accumulation-node shape → resident; big leaf → streaming
+    assert ops.fused_plan(512, 256, d=128)["tier"] == "resident"
+    assert ops.fused_plan(4096, 4096, d=256)["tier"] == "streaming"
+    # without feature-dim info the resident tier is never offered
+    assert ops.fused_plan(512, 256)["tier"] == "streaming"
+
+
+def test_plan_vmem_squeeze_demotes_tier(monkeypatch):
+    # 'interpret' exercises the real Pallas VMEM gate ('ref' has none)
+    kw = dict(n=512, c=256, d=128, backend="interpret")
+    assert ops.fused_plan(kw["n"], kw["c"], d=kw["d"],
+                          backend=kw["backend"])["tier"] == "resident"
+    monkeypatch.setenv("REPRO_FUSED_VMEM_MB", "1")
+    plan = ops.fused_plan(kw["n"], kw["c"], d=kw["d"],
+                          backend=kw["backend"])
+    assert plan["tier"] == "streaming" and plan["loop_block_n"] > 0
+    # VMEM too small for even one loop/step block → per-step fallback
+    monkeypatch.setenv("REPRO_FUSED_VMEM_MB", "0.01")
+    assert ops.fused_plan(kw["n"], kw["c"], d=kw["d"],
+                          backend=kw["backend"]) is None
+
+
+def test_plan_cache_squeeze_switches_to_bf16_then_fallback(monkeypatch):
+    n = c = 4096                    # padded f32 cache: 64 MB, bf16: 32 MB
+    assert ops.fused_plan(n, c)["dtype"] == "float32"
+    monkeypatch.setenv("REPRO_FUSED_CACHE_MB", "48")
+    plan = ops.fused_plan(n, c)
+    assert plan["dtype"] == "bfloat16"          # bf16 doubles the headroom
+    monkeypatch.setenv("REPRO_FUSED_CACHE_MB", "16")
+    assert ops.fused_plan(n, c) is None         # paper's memory-capped path
+    # forcing f32 refuses the bf16 escape hatch
+    monkeypatch.setenv("REPRO_FUSED_CACHE_MB", "48")
+    monkeypatch.setenv("REPRO_FUSED_CACHE_DTYPE", "f32")
+    assert ops.fused_plan(n, c) is None
+
+
+def test_plan_forced_bf16(monkeypatch):
+    monkeypatch.setenv("REPRO_FUSED_CACHE_DTYPE", "bf16")
+    assert ops.fused_plan(1024, 1024)["dtype"] == "bfloat16"
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_mega_bf16_cache_parity(backend, monkeypatch):
+    """bf16 cache storage (f32 accumulate): both step-wise fused and the
+    megakernel read the SAME bf16 matrix, so their selections must still
+    be bit-identical; quality stays within bf16 rounding of f32."""
+    monkeypatch.setenv("REPRO_FUSED_CACHE_DTYPE", "bf16")
+    monkeypatch.setenv("REPRO_FUSED_VMEM_MB", "1")   # force streaming
+    ids, x, valid = _points()
+    obj = make_objective("facility", backend=backend)
+    fused = greedy(obj, ids, x, valid, 12, engine="fused")
+    mega = greedy(obj, ids, x, valid, 12, engine="mega")
+    _assert_same_selection(fused, mega, value_tol=1e-4)
+    monkeypatch.delenv("REPRO_FUSED_CACHE_DTYPE")
+    f32 = greedy(obj, ids, x, valid, 12, engine="mega")
+    np.testing.assert_allclose(float(mega.value), float(f32.value),
+                               rtol=2e-2)
+
+
+def test_mega_respects_cache_budget_fallback(monkeypatch):
+    """Under the shrunken HBM budget the megakernel must refuse (plan is
+    None) and engine='auto' must silently produce the per-step result."""
+    monkeypatch.setenv("REPRO_FUSED_CACHE_MB", "0.01")
+    ids, x, valid = _points(n=200)
+    obj = make_objective("kmedoid", backend="ref")
+    assert ops.fused_plan(200, 200, d=48, backend="ref") is None
+    assert obj.megakernel_loop(obj.init_state(x, valid), x, valid, 8) is None
+    a = greedy(obj, ids, x, valid, 8, engine="step")
+    b = greedy(obj, ids, x, valid, 8, engine="auto")
+    _assert_same_selection(a, b, value_tol=0)
+
+
+# ---------------------------------------------------------------------------
+# stochastic-greedy draws (satellite: without replacement)
+# ---------------------------------------------------------------------------
+
+
+def test_sample_candidates_without_replacement():
+    idx = np.asarray(_sample_candidates(jax.random.PRNGKey(3), k=12,
+                                        n=200, sample=64))
+    assert idx.shape == (12, 64)
+    for row in idx:
+        assert len(set(row.tolist())) == 64      # distinct within a step
+    assert np.all((idx >= 0) & (idx < 200))
+    # steps draw different subsets (same-key determinism is covered by
+    # test_perf_features.test_stochastic_greedy_deterministic_under_key)
+    assert len({tuple(sorted(r.tolist())) for r in idx}) > 1
+
+
+def test_sampling_subset_effective_size_is_exact():
+    """With sample == n−1 every step must evaluate exactly n−1 distinct
+    candidates minus those already selected — impossible under the old
+    with-replacement draw (collision probability ≈ 1)."""
+    n, k = 64, 6
+    x = jnp.asarray(gen_images(n, 16, classes=4, seed=1))
+    ids, valid = jnp.arange(n, dtype=jnp.int32), jnp.ones(n, bool)
+    obj = make_objective("facility", backend="ref")
+    sol = greedy(obj, ids, x, valid, k, sample=n - 1,
+                 key=jax.random.PRNGKey(0))
+    # each step draws n−1 distinct of n candidates; of those, the already
+    # selected ones are masked, so step s evaluates n−1−s or n−s gains
+    lo = sum((n - 1) - s for s in range(k))
+    hi = (n - 1) * k
+    assert lo <= int(sol.evals) <= hi
