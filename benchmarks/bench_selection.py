@@ -46,21 +46,9 @@ NODE = dict(n=256, d=128, k=16)               # accumulation-node shape
 
 
 def _count_pallas_dispatches(jaxpr) -> int:
-    """Pallas dispatches per execution, statically from the jaxpr: each
-    pallas_call eqn counts once, scan bodies count × trip length."""
-    total = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            total += 1
-            continue
-        mult = (eqn.params.get("length", 1)
-                if eqn.primitive.name == "scan" else 1)
-        for v in eqn.params.values():
-            for sub in (v if isinstance(v, (tuple, list)) else (v,)):
-                inner = getattr(sub, "jaxpr", sub)
-                if hasattr(inner, "eqns"):
-                    total += mult * _count_pallas_dispatches(inner)
-    return total
+    """Counted dispatches — shared util, see ops.count_pallas_dispatches."""
+    from repro.kernels.ops import count_pallas_dispatches
+    return count_pallas_dispatches(jaxpr)
 
 
 def _dispatch_counts(name, n, d, k):

@@ -1,0 +1,150 @@
+"""Streaming-engine perf: batched stream-filter vs per-arrival baseline.
+
+Emits ``benchmarks/BENCH_streaming.json`` with arrivals/sec and the
+COUNTED dispatches-per-batch column (jaxpr-counted via
+ops.count_pallas_dispatches, as in bench_selection.py): the batched
+kernel processes one batch of B arrivals against ALL L sieve levels in
+ONE Pallas dispatch, where the per-arrival baseline (the same sieve fed
+B=1 batches) pays B dispatches — plus B× the fixed per-dispatch overhead
+that dominates small-batch streaming on real hardware.
+
+Backends: 'interpret' is the acceptance metric (faithful to the TPU
+execution model — no cross-dispatch fusion), 'ref' records the
+XLA-fused CPU floor. Configs: single-device sieve and the simulated-mesh
+continuous mode (vmapped lanes + periodic GreedyML tree merges).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.functions import make_objective
+from repro.data.synthetic import gen_stream
+from repro.kernels import ops
+from repro.streaming import (SieveStreamer, stream_select,
+                             stream_select_continuous)
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_streaming.json")
+
+FULL = dict(n=4096, d=128, batch=256, k=32)
+SMALL = dict(n=768, d=48, batch=128, k=16)
+MESH = dict(lanes=4, merge_every=4)
+
+
+def _dispatches_per_batch(streamer, batch, d):
+    """Jaxpr-counted Pallas dispatches for one arrival batch of size
+    `batch`, and for the same arrivals fed one at a time."""
+    state = jax.eval_shape(streamer.init,
+                           jax.ShapeDtypeStruct((batch, d), jnp.float32))
+
+    def count(b):
+        jaxpr = jax.make_jaxpr(streamer.process_batch)(
+            state, jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.bool_))
+        return ops.count_pallas_dispatches(jaxpr.jaxpr)
+
+    return dict(batched=count(batch), per_arrival=batch * count(1))
+
+
+def _rebatch(stream, size):
+    """Split a stream's batches into size-`size` sub-batches."""
+    for ids, pay, valid in stream:
+        for i in range(0, ids.shape[0], size):
+            yield ids[i:i + size], pay[i:i + size], valid[i:i + size]
+
+
+def _time_stream(fn, reps=1):
+    fn()                                   # compile + warmup
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best
+
+
+def _objective_rows(name, cfg, backends):
+    n, d, batch, k = cfg["n"], cfg["d"], cfg["batch"], cfg["k"]
+    st = gen_stream(name, n, d=d, batch=batch, order="shuffled", seed=0)
+    ground = jnp.asarray(st.payloads)
+    out = {}
+    for backend in backends:
+        obj = make_objective(name, backend="ref")
+        streamer = SieveStreamer(obj, k, ground=ground, backend=backend)
+        disp = _dispatches_per_batch(streamer, batch, d)
+        kw = dict(ground=ground, backend=backend)
+        t_batch = _time_stream(lambda: stream_select(obj, st, k, **kw))
+        t_single = _time_stream(
+            lambda: stream_select(obj, _rebatch(st, 1), k, **kw))
+        t_mesh = _time_stream(lambda: stream_select_continuous(
+            obj, st, k, lanes=MESH["lanes"],
+            merge_every=MESH["merge_every"], **kw)[0])
+        plan = ops.stream_plan(n, streamer.levels, batch, d,
+                               backend=backend)
+        out[backend] = dict(
+            wall_batched_s=round(t_batch, 4),
+            wall_per_arrival_s=round(t_single, 4),
+            wall_mesh_s=round(t_mesh, 4),
+            speedup_batched=round(t_single / max(t_batch, 1e-9), 2),
+            arrivals_per_s=round(n / max(t_batch, 1e-9), 1),
+            arrivals_per_s_per_arrival=round(n / max(t_single, 1e-9), 1),
+            arrivals_per_s_mesh=round(n / max(t_mesh, 1e-9), 1),
+            dispatches_per_batch=disp["batched"],
+            dispatches_per_batch_baseline=disp["per_arrival"],
+            levels=streamer.levels,
+            plan_tier=plan["tier"] if plan else "fallback",
+        )
+    return out
+
+
+def run(full: bool = False):
+    cfg = FULL if full else SMALL
+    results = dict(
+        config=dict(**cfg, **MESH, full=full,
+                    device=jax.default_backend()),
+        objectives={
+            "facility": _objective_rows("facility", cfg,
+                                        ("interpret", "ref")),
+            "kmedoid": _objective_rows("kmedoid", cfg,
+                                       ("interpret", "ref")),
+        },
+    )
+    out_path = OUT_PATH
+    if not full and os.path.exists(OUT_PATH):
+        try:
+            with open(OUT_PATH) as f:
+                existing_full = bool(json.load(f)["config"]["full"])
+        except (KeyError, ValueError):
+            existing_full = False
+        if existing_full:
+            out_path = OUT_PATH.replace(".json", "_small.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    return results, out_path
+
+
+def main(full: bool = False):
+    res, out_path = run(full)
+    print("objective,backend,arrivals/s(batched),arrivals/s(per-arrival),"
+          "arrivals/s(mesh),speedup,dispatches/batch(batched/baseline)")
+    for name, per_backend in res["objectives"].items():
+        for backend, r in per_backend.items():
+            print(f"{name},{backend},{r['arrivals_per_s']},"
+                  f"{r['arrivals_per_s_per_arrival']},"
+                  f"{r['arrivals_per_s_mesh']},{r['speedup_batched']},"
+                  f"{r['dispatches_per_batch']}/"
+                  f"{r['dispatches_per_batch_baseline']}")
+    print(f"wrote {out_path}")
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(ap.parse_args().full)

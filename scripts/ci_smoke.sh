@@ -17,4 +17,9 @@ echo "== megakernel parity (REPRO_KERNEL_BACKEND=interpret) =="
 REPRO_KERNEL_BACKEND=interpret python -m pytest -q \
     tests/test_megakernel.py
 
+echo "== streaming engine (REPRO_KERNEL_BACKEND=interpret) =="
+REPRO_KERNEL_BACKEND=interpret python -m pytest -q \
+    tests/test_streaming.py
+python -m repro.launch.stream --smoke
+
 echo "CI smoke OK"

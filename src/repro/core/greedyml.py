@@ -75,6 +75,61 @@ def _broadcast_from_root(sol: Solution, tree_axes: Sequence[str],
                     pick(sol.value), pick(sol.evals))
 
 
+def accumulate_levels(objective, s_prev: Solution, k: int,
+                      tree_axes: Sequence[str], radices: Sequence[int],
+                      aug_levels: Optional[jax.Array] = None,
+                      sample_level: int = 0,
+                      node_engine: str = "auto",
+                      carry_prev: Optional[Solution] = None) -> Solution:
+    """The accumulation rounds of Algorithm 3.1 as a standalone SPMD
+    function: starting from ANY per-lane solution `s_prev` (a leaf Greedy
+    for greedyml proper, a sieve summary for the streaming continuous
+    mode — streaming/driver.py), run the level-ℓ gather + node-local
+    Greedy + argmax{f(S), f(S_prev)} recurrence up the tree. Must be
+    called inside shard_map over `tree_axes`.
+
+    ``aug_levels``: optional (L, A, …) per-level extra evaluation elements
+    concatenated to each node's ground set (paper §6.4 augmentation; the
+    streaming driver passes its fixed evaluation set here so merged
+    summaries are scored against the query set, not only the union).
+    ``carry_prev``: optional extra competitor (e.g. the last merged
+    solution of a continuous stream) replayed on the ROOT node's ground
+    and select_better'd against the result.
+    """
+    ground, ground_valid = s_prev.payloads, s_prev.valid
+    for lvl, ax in enumerate(tree_axes):
+        u_ids = lax.all_gather(s_prev.ids, ax, axis=0, tiled=True)
+        u_pay = lax.all_gather(s_prev.payloads, ax, axis=0, tiled=True)
+        u_val = lax.all_gather(s_prev.valid, ax, axis=0, tiled=True)
+        ground, ground_valid = u_pay, u_val
+        if aug_levels is not None:
+            ground = jnp.concatenate([u_pay, aug_levels[lvl]], axis=0)
+            ground_valid = jnp.concatenate(
+                [u_val, jnp.ones(aug_levels[lvl].shape[0], bool)], axis=0)
+        lvl_key = None
+        if sample_level:
+            lvl_key = jax.random.fold_in(
+                jax.random.PRNGKey(23 + lvl),
+                _machine_flat_id(tree_axes, radices))
+        s_new = greedy(objective, u_ids, u_pay, u_val, k,
+                       ground=ground, ground_valid=ground_valid,
+                       sample=sample_level, key=lvl_key,
+                       engine=node_engine)
+        prev_score = replay_value(objective, s_prev.payloads,
+                                  s_prev.valid, ground, ground_valid)
+        s_prev = select_better(
+            s_new, Solution(s_prev.ids, s_prev.payloads, s_prev.valid,
+                            prev_score, s_prev.evals))
+    if carry_prev is not None:
+        carry_score = replay_value(objective, carry_prev.payloads,
+                                   carry_prev.valid, ground, ground_valid)
+        s_prev = select_better(
+            s_prev, Solution(carry_prev.ids, carry_prev.payloads,
+                             carry_prev.valid, carry_score,
+                             carry_prev.evals))
+    return s_prev
+
+
 def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
                       radices: Sequence[int],
                       augment: Optional[jax.Array] = None,
@@ -104,30 +159,10 @@ def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
                         sample=sample_leaf, key=leaf_key, engine=engine)
 
         # ---- accumulation levels ------------------------------------------
-        for lvl, ax in enumerate(tree_axes):
-            u_ids = lax.all_gather(s_prev.ids, ax, axis=0, tiled=True)
-            u_pay = lax.all_gather(s_prev.payloads, ax, axis=0, tiled=True)
-            u_val = lax.all_gather(s_prev.valid, ax, axis=0, tiled=True)
-            ground, ground_valid = u_pay, u_val
-            if aug:
-                ground = jnp.concatenate([u_pay, aug[0][lvl]], axis=0)
-                ground_valid = jnp.concatenate(
-                    [u_val, jnp.ones(aug[0][lvl].shape[0], bool)], axis=0)
-            lvl_key = None
-            if sample_level:
-                lvl_key = jax.random.fold_in(
-                    jax.random.PRNGKey(23 + lvl),
-                    _machine_flat_id(tree_axes, radices))
-            s_new = greedy(objective, u_ids, u_pay, u_val, k,
-                           ground=ground, ground_valid=ground_valid,
-                           sample=sample_level, key=lvl_key,
-                           engine=node_engine)
-            prev_score = replay_value(objective, s_prev.payloads,
-                                      s_prev.valid, ground, ground_valid)
-            s_prev = select_better(
-                s_new, Solution(s_prev.ids, s_prev.payloads, s_prev.valid,
-                                prev_score, s_prev.evals))
-
+        s_prev = accumulate_levels(objective, s_prev, k, tree_axes, radices,
+                                   aug_levels=aug[0] if aug else None,
+                                   sample_level=sample_level,
+                                   node_engine=node_engine)
         return _broadcast_from_root(s_prev, tree_axes, radices)
 
     return fn

@@ -8,9 +8,16 @@ facility-location (or exemplars with k-medoid) via:
   * the **distributed** driver (core.greedyml) when a mesh is available —
     embeddings stay sharded across the data axis exactly as training shards
     documents; the accumulation tree reuses the mesh axes;
-  * the **simulator** (core.simulate) on a single device.
+  * the **simulator** (core.simulate) on a single device;
+  * the **streaming engine** (repro.streaming) for ``stream:*`` specs —
+    documents arrive in batches through a sieve instead of running an
+    offline k-pass greedy over the materialized pool: one pass over the
+    stream, O(levels·k) solution slots plus O(levels·N_eval) state over
+    the fixed evaluation set (pass a subsampled ground to bound it
+    independently of the stream length; DESIGN §Streaming).
 
-``spec`` strings: 'greedyml:facility', 'randgreedi:kmedoid', 'none', …
+``spec`` strings: 'greedyml:facility', 'randgreedi:kmedoid',
+'stream:facility', 'stream:kcover', 'none', …
 """
 from __future__ import annotations
 
@@ -53,12 +60,36 @@ def select_coreset(embeddings: np.ndarray, k: int, spec: str = "greedyml:facilit
                    mesh: Optional[Mesh] = None,
                    tree_axes: Optional[Sequence[str]] = None,
                    machines: int = 8, branching: int = 2,
-                   seed: int = 0) -> np.ndarray:
+                   seed: int = 0, stream_batch: int = 0,
+                   stream_order: str = "shuffled",
+                   stream_eval: int = 0) -> np.ndarray:
     """Returns selected document indices (≤ k)."""
+    from repro.runtime import flags
+
     algo, obj_name = parse_spec(spec)
     n = embeddings.shape[0]
     if algo == "none":
         return np.arange(n)
+    if algo == "stream":
+        from repro.data.synthetic import Stream
+        from repro.streaming import stream_select
+        if obj_name in ("kcover", "kdom", "coverage"):
+            raise ValueError("stream:* coreset selection operates on "
+                             "embeddings; use launch/stream.py for "
+                             "coverage streams")
+        rng = np.random.default_rng(seed + 101)
+        stream = Stream(np.asarray(embeddings, np.float32),
+                        rng.permutation(n) if stream_order == "shuffled"
+                        else np.arange(n),
+                        stream_batch or flags.stream_batch())
+        obj = make_objective(obj_name)
+        # evaluation ground: the pool, or a fixed subsample so sieve state
+        # stays O(levels·stream_eval) regardless of how long the stream is
+        ground = np.asarray(embeddings, np.float32)
+        if 0 < stream_eval < n:
+            ground = ground[rng.choice(n, stream_eval, replace=False)]
+        sol = stream_select(obj, stream, k, ground=jnp.asarray(ground))
+        return np.asarray(sol.ids)[np.asarray(sol.valid)]
     if mesh is not None:
         axes = tuple(tree_axes or factor_tree_axes(mesh, mesh.axis_names))
         obj = make_objective(obj_name)

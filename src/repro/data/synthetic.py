@@ -12,7 +12,8 @@ No downloads: everything is seeded numpy. Regimes match Table 2:
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+import dataclasses
+from typing import Iterator, List, Tuple
 
 import numpy as np
 
@@ -116,3 +117,99 @@ def gen_tokens(n_docs: int, seq: int, vocab: int, seed: int = 0
 def sets_stats(sets: List[np.ndarray]) -> Tuple[float, int]:
     sizes = np.asarray([len(s) for s in sets])
     return float(sizes.mean()), int(sizes.sum())
+
+
+# ---------------------------------------------------------------------------
+# arrival streams (streaming subsystem, DESIGN §Streaming)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Stream:
+    """A deterministic arrival stream over a synthetic dataset.
+
+    ``payloads`` is the dataset in ORIGINAL index order (so offline
+    baselines and global_value see the same ids); ``order`` is the arrival
+    permutation. Iterating yields ``(ids, payloads, valid)`` batches of
+    exactly ``batch`` arrivals — the last batch is zero-padded with
+    valid=False — and is restartable (each iteration replays the same
+    stream), which is what checkpoint/resume tests rely on.
+    """
+
+    payloads: np.ndarray        # (n, …) element payloads, original order
+    order: np.ndarray           # (n,) arrival permutation of element ids
+    batch: int
+    universe: int = 0           # > 0 for coverage streams
+
+    @property
+    def n(self) -> int:
+        return self.order.shape[0]
+
+    def batches(self) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        pad = (-self.n) % self.batch
+        ids = np.concatenate([self.order,
+                              np.zeros(pad, np.int64)]).astype(np.int32)
+        valid = np.concatenate([np.ones(self.n, bool),
+                                np.zeros(pad, bool)])
+        pay = np.concatenate(
+            [self.payloads[self.order],
+             np.zeros((pad,) + self.payloads.shape[1:],
+                      self.payloads.dtype)])
+        for i in range(0, self.n + pad, self.batch):
+            yield (ids[i:i + self.batch], pay[i:i + self.batch],
+                   valid[i:i + self.batch])
+
+    def __iter__(self):
+        return self.batches()
+
+
+def _singleton_proxy(name: str, payloads: np.ndarray) -> np.ndarray:
+    """Exact raw singleton gains, used to build adversarial orderings."""
+    if name in ("kcover", "kdom", "coverage"):
+        return np.unpackbits(payloads.view(np.uint8),
+                             axis=1).sum(axis=1).astype(np.float64)
+    x = payloads.astype(np.float32)
+    if name == "kmedoid":
+        mind0 = np.linalg.norm(x, axis=1)
+        d = np.sqrt(np.maximum(
+            (x ** 2).sum(1)[:, None] + (x ** 2).sum(1)[None, :]
+            - 2.0 * x @ x.T, 0.0))
+        return np.maximum(mind0[:, None] - d, 0.0).sum(axis=0)
+    return np.maximum(x @ x.T, 0.0).sum(axis=0)       # facility
+
+
+def gen_stream(name: str, n: int, *, d: int = 64, universe: int = 0,
+               batch: int = 64, order: str = "shuffled", seed: int = 0,
+               clusters: int = 20, avg_size: float = 10.0) -> Stream:
+    """Deterministic arrival stream over the existing generators, so
+    streaming tests and benchmarks share one source.
+
+    ``name``: 'kcover' (packed bitmaps; needs ``universe``) | 'kmedoid' |
+    'facility' (unit-norm embeddings). ``order``:
+      * 'shuffled'    — uniform random arrival order
+      * 'adversarial' — ascending singleton gain: the most valuable
+                        elements arrive LAST (worst case for the sieve's
+                        first-batch grid anchor and threshold fills)
+      * 'drift'       — cluster-ordered arrivals (distribution drift:
+                        each cluster's mass arrives contiguously)
+    """
+    rng = np.random.default_rng(seed + 101)
+    if name in ("kcover", "kdom", "coverage"):
+        assert universe > 0, "coverage streams need a universe size"
+        sets = gen_kcover(n, universe, seed=seed, avg_size=avg_size)
+        payloads = pack_bitmaps(sets, universe)
+        drift_key = np.asarray([int(s[0]) if len(s) else 0 for s in sets])
+    else:
+        payloads = gen_images(n, d, classes=clusters, seed=seed)
+        centers = gen_images(clusters, d, classes=clusters, seed=seed + 7)
+        drift_key = np.argmax(payloads @ centers.T, axis=1)
+    if order == "shuffled":
+        perm = rng.permutation(n)
+    elif order == "adversarial":
+        perm = np.argsort(_singleton_proxy(name, payloads), kind="stable")
+    elif order == "drift":
+        # stable sort by cluster keeps within-cluster order deterministic
+        perm = np.argsort(drift_key, kind="stable")
+    else:
+        raise KeyError(f"unknown stream order {order!r}")
+    return Stream(payloads, perm.astype(np.int64), batch, universe)

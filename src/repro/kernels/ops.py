@@ -25,17 +25,22 @@ k-step selection in one dispatch (the whole-greedy megakernel);
 per-step fallback — with a bf16 cache-storage option (f32 accumulate) that
 doubles the HBM headroom before the paper's memory-capped fallback
 triggers.
+
+Streaming engine (DESIGN §Streaming): ``stream_filter`` folds one batch of
+B arrivals into ALL L sieve levels in one dispatch
+(kernels/stream_filter.py), gated by the ``stream_plan`` VMEM check with
+the jnp oracle (ref.stream_sieve) as fallback and parity ground truth.
 """
 from __future__ import annotations
 
 import contextlib
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.runtime import flags
 from repro.kernels import ref
 from repro.kernels.coverage_gains import (TILE_C as COV_TC, TILE_W,
                                           coverage_gains_pallas)
@@ -51,24 +56,14 @@ F32 = jnp.float32
 
 _BIG = 3.0e38  # padding curmax sentinel (≈ f32 max; keeps inc at exactly 0)
 
-# memory budgets for the fused engine (overridable for tests/small hosts)
-_CACHE_MB_ENV = "REPRO_FUSED_CACHE_MB"   # HBM budget for the (N, C) matrix
-_VMEM_MB_ENV = "REPRO_FUSED_VMEM_MB"     # per-block VMEM budget
-_CACHE_DTYPE_ENV = "REPRO_FUSED_CACHE_DTYPE"  # auto | f32 | bf16
-_CACHE_MB_DEFAULT = 2048.0
-_VMEM_MB_DEFAULT = 8.0
-
 # resident-tier padding: accumulation-node shapes drift level by level, so
 # the ground-row axis buckets from a small base to keep the matrix (and the
 # compile cache) tight
 RES_TILE_N = 8
 
-
-def _backend(override: Optional[str]) -> str:
-    b = override or os.environ.get("REPRO_KERNEL_BACKEND", "auto")
-    if b == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "ref"
-    return b
+# memory budgets / backend selection live behind typed accessors in
+# runtime/flags.py (one place to override in tests/benchmarks)
+_backend = flags.kernel_backend
 
 
 def _bucket_len(size: int, tile: int) -> int:
@@ -135,13 +130,6 @@ def coverage_gains(cand_bits, covered, cand_valid, backend=None):
 # ---------------------------------------------------------------------------
 
 
-def _budget_mb(env: str, default: float) -> float:
-    try:
-        return float(os.environ.get(env, default))
-    except ValueError:
-        return default
-
-
 _VMAP_REPLICAS = 1          # caches live concurrently under vmap (trace-time)
 
 
@@ -162,11 +150,6 @@ def fused_replicas(n: int):
         _VMAP_REPLICAS = old
 
 
-def _cache_dtype_pref() -> str:
-    v = os.environ.get(_CACHE_DTYPE_ENV, "auto").lower()
-    return v if v in ("auto", "f32", "bf16") else "auto"
-
-
 def fused_block_n(n_pad: int, c_pad: int, itemsize: int = 4) -> int:
     """Largest power-of-two row-block (≤256) whose fused-step working set
     fits the VMEM budget; 0 if none fits.
@@ -176,7 +159,7 @@ def fused_block_n(n_pad: int, c_pad: int, itemsize: int = 4) -> int:
     (1, C) gains accumulator and mask blocks, and two (1, BN) state rows.
     bf16 storage floors BN at its (16, 128) min tile.
     """
-    vmem = _budget_mb(_VMEM_MB_ENV, _VMEM_MB_DEFAULT) * 2 ** 20
+    vmem = flags.fused_vmem_mb() * 2 ** 20
     bn_min = 16 if itemsize == 2 else 8
     bn = 256
     while bn >= bn_min:
@@ -194,7 +177,7 @@ def loop_block_n(n_pad: int, c_pad: int, itemsize: int = 4) -> int:
     Same per-block working set as fused_block_n plus the loop's persistent
     scratch: the full (N/BN, BN) state row, the evolving (1, C) candidate
     mask, and the (1, C) gains accumulator."""
-    vmem = _budget_mb(_VMEM_MB_ENV, _VMEM_MB_DEFAULT) * 2 ** 20
+    vmem = flags.fused_vmem_mb() * 2 ** 20
     bn_min = 16 if itemsize == 2 else 8
     bn = 256
     while bn >= bn_min:
@@ -212,7 +195,7 @@ def resident_fits(n_pad: int, c_pad: int, d_pad: int) -> bool:
     tier: (N, D)/(C, D) feature blocks, the on-chip (N, C) matrix, the
     (N, C) relu-partials temporary, and the state/mask/gains rows — all
     f32 (the matrix is built in-kernel; cache storage dtype is moot)."""
-    vmem = _budget_mb(_VMEM_MB_ENV, _VMEM_MB_DEFAULT) * 2 ** 20
+    vmem = flags.fused_vmem_mb() * 2 ** 20
     need = 4 * (n_pad * d_pad + c_pad * d_pad
                 + 2 * n_pad * c_pad
                 + 4 * c_pad + 4 * n_pad)
@@ -253,8 +236,8 @@ def fused_plan(n: int, c: int, d: Optional[int] = None,
         # RES_TILE_N base — gate it on what it will actually allocate
         n_res = _bucket_len(n, RES_TILE_N)
         d_pad = -(-d // 128) * 128 if d else None
-    cache = _budget_mb(_CACHE_MB_ENV, _CACHE_MB_DEFAULT) * 2 ** 20
-    pref = _cache_dtype_pref()
+    cache = flags.fused_cache_mb() * 2 ** 20
+    pref = flags.fused_cache_dtype()
     dtype, itemsize = None, 4
     for cand, size in (("float32", 4), ("bfloat16", 2)):
         if (pref, cand) in (("bf16", "float32"), ("f32", "bfloat16")):
@@ -385,6 +368,113 @@ def greedy_loop_resident(ground, cands, row, mask, k: int,
         g, cd, r, mk, k, pw_mode=pw_mode, mode=mode,
         interpret=(b == "interpret"))
     return new_row[:n], bests, gains
+
+
+def count_pallas_dispatches(jaxpr) -> int:
+    """Pallas dispatches per execution, statically from a jaxpr: each
+    pallas_call eqn counts once, scan bodies count × trip length. The
+    measured (not modeled) dispatch column of bench_selection.py /
+    bench_streaming.py and the streaming acceptance check (one dispatch
+    per arrival batch)."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+            continue
+        mult = (eqn.params.get("length", 1)
+                if eqn.primitive.name == "scan" else 1)
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (tuple, list)) else (v,)):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    total += mult * count_pallas_dispatches(inner)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Batched sieve-streaming filter (streaming/sieve.py, DESIGN §Streaming)
+# ---------------------------------------------------------------------------
+
+
+def stream_plan(n: int, l: int, b: int, d: int,
+                backend=None) -> Optional[dict]:
+    """Static VMEM gate for the batched stream-filter kernel, in the style
+    of `fused_plan`: the kernel holds the (N, D)/(B, D) feature blocks, the
+    on-chip (N, B) matrix, the (L, N) level rows (in, out, and the relu
+    partials temporary), and the (L, B) admit matrix resident for the whole
+    dispatch. Returns {'tier': 'kernel'} when that fits the stream VMEM
+    budget, {'tier': 'ref'} on the jnp backend, and None when the Pallas
+    working set busts the budget — callers then use the ref.stream_sieve
+    oracle path (one fused jnp computation, still one jit call per batch).
+    """
+    bk = _backend(backend)
+    if bk == "ref":
+        return {"tier": "ref"}
+    n_pad = -(-n // RES_TILE_N) * RES_TILE_N
+    l_pad = -(-l // RES_TILE_N) * RES_TILE_N
+    b_pad = -(-b // 128) * 128
+    d_pad = -(-d // 128) * 128
+    need = 4 * (n_pad * d_pad + b_pad * d_pad + n_pad * b_pad
+                + 3 * l_pad * n_pad + 2 * l_pad * b_pad + 8 * l_pad)
+    if need <= flags.stream_vmem_mb() * 2 ** 20:
+        return {"tier": "kernel"}
+    return None
+
+
+def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
+                  bvalid, k: int, eps_log: float, pw_mode: str = "dist",
+                  mode: str = "min", backend=None,
+                  plan: Optional[dict] = None):
+    """One batch of B arrivals against all L sieve levels in ONE dispatch
+    (kernels/stream_filter.py) — the on-chip (N, B) matrix serves both
+    the singleton-gain re-anchor and the admission loop.
+
+    ground: (N, D) fixed evaluation set; batch: (B, D) arrival payloads;
+    rows: (L, N) per-level state (mind/curmax); row0: (N,) empty-solution
+    row; values: (L,) raw units; counts/expos: (L,) i32; m_max: () f32;
+    bvalid: (B,) bool/0-1; eps_log: log(1+ε) (static). Returns (rows
+    (L, N), values (L,), counts (L,), admits (L, B) bool, expos (L,),
+    m_new (), expired (L,) bool). ``plan``: the stream_plan dict,
+    threaded through so the gate is not re-derived per batch; a
+    non-kernel plan (or None) routes to the jnp oracle.
+    """
+    from repro.kernels.stream_filter import stream_filter_pallas
+    bk = _backend(backend)
+    n, l, b = ground.shape[0], rows.shape[0], batch.shape[0]
+    plan = plan if plan is not None else stream_plan(
+        n, l, b, ground.shape[1], backend=backend)
+    if bk == "ref" or plan is None or plan.get("tier") != "kernel":
+        mat = (ref.pairwise_dist(ground, batch) if pw_mode == "dist"
+               else ref.pairwise_sim(ground, batch))
+        rows, values, counts, admits, expos, m_new, expired = \
+            ref.stream_sieve(mat, row0.astype(F32), rows,
+                             values.astype(F32), counts, expos,
+                             m_max, bvalid.astype(F32), k, eps_log,
+                             mode=mode)
+        return rows, values, counts, admits > 0, expos, m_new, expired > 0
+    assert l % RES_TILE_N == 0, \
+        f"levels ({l}) must be a multiple of {RES_TILE_N} on Pallas " \
+        "backends (SieveStreamer rounds up)"
+    row_pad = 0.0 if mode == "min" else _BIG
+    g = _pad_to(_pad_to(ground, 0, RES_TILE_N, bucket=False), 1, 128,
+                bucket=False)
+    bt = _pad_to(_pad_to(batch, 0, 128, bucket=False), 1, 128, bucket=False)
+    n_pad = g.shape[0]
+    r = _pad_to(rows.astype(F32), 1, RES_TILE_N, value=row_pad,
+                bucket=False)
+    r0 = _pad_to(row0.astype(F32), 0, RES_TILE_N, value=row_pad,
+                 bucket=False).reshape(1, n_pad)
+    vals = values.astype(F32).reshape(l, 1)
+    cnt = counts.astype(jnp.int32).reshape(l, 1)
+    exp_ = expos.astype(jnp.int32).reshape(l, 1)
+    m_ = m_max.astype(F32).reshape(1, 1)
+    bv = _pad_to(bvalid.astype(F32).reshape(1, b), 1, 128, bucket=False)
+    rows_o, vals_o, cnt_o, admits, expos_o, m_o, expired = \
+        stream_filter_pallas(g, bt, r, r0, vals, cnt, exp_, m_, bv, k,
+                             eps_log, pw_mode=pw_mode, mode=mode,
+                             interpret=(bk == "interpret"))
+    return (rows_o[:, :n], vals_o[:, 0], cnt_o[:, 0], admits[:, :b] > 0,
+            expos_o[:, 0], m_o[0, 0], expired[:, 0] > 0)
 
 
 def apply_column(mat, row, idx, mode: str = "min"):

@@ -121,6 +121,153 @@ def greedy_loop(mat: jax.Array, row: jax.Array, mask: jax.Array, k: int,
     return jnp.where(prev >= 0, upd, row), bests, gains
 
 
+def sieve_admit(gains, values, counts, vgrid, ok, k: int):
+    """Sieve-Streaming admission rule (Badanidiyuru et al. 2014), shared
+    by the Pallas stream-filter kernel and both jnp oracles so the
+    threshold semantics can never drift between them: admit when |S_l| < k
+    and the raw gain clears (v_l/2 − f(S_l))/(k − |S_l|). The `gain > 0`
+    conjunct only skips zero-gain fills after f(S_l) has already reached
+    v_l/2 (threshold ≤ 0), which never lowers the level's final value.
+    Shapes broadcast; all raw units."""
+    remaining = jnp.maximum(k - counts, 1).astype(F32)
+    thresh = (vgrid * 0.5 - values) / remaining
+    return ok & (counts < k) & (gains >= thresh) & (gains > 0.0)
+
+
+def sieve_reanchor(singletons, bvalid, rows, row0, values, counts, expos,
+                   m_max, eps_log: float):
+    """Slide the sieve exponent window up to the new max singleton gain
+    (DESIGN §Streaming), recycling expired levels (v < m ⇒ provably not
+    OPT's sieve) as fresh sieves at the exponents above the old window
+    top — the classic create/discard at batch granularity, fixed-shape.
+    Shared semantics for the kernel and oracles; all 2D operands:
+    singletons/bvalid (1, B), rows (L, N|W), row0 (1, N|W) fresh level
+    state, values (L, 1), counts (L, 1) i32, expos (L, 1) i32, m_max ().
+
+    Returns (rows, values, counts, expos, m_new (), expired (L, 1))."""
+    l = expos.shape[0]
+    m_new = jnp.maximum(m_max, jnp.max(jnp.where(bvalid > 0, singletons,
+                                                 0.0)))
+    low = jnp.where(
+        m_new > 0.0,
+        jnp.ceil(jnp.log(jnp.maximum(m_new, 1e-30))
+                 / eps_log).astype(jnp.int32),
+        jnp.min(expos))
+    # first anchor: every slot is still empty (an admitted element would
+    # have set m_max > 0), so the whole window may jump — also DOWN, for
+    # data whose raw gains are < 1
+    first = (m_max == 0.0) & (m_new > 0.0)
+    lidx = jax.lax.broadcasted_iota(jnp.int32, (l, 1), 0)
+    base = jnp.where(first, low + lidx, expos)
+    expired = base < low
+    old_high = jnp.max(base)
+    # distinct exponents ⇒ expired slots rank uniquely; refill the missing
+    # window exponents ascending (max() covers the full-window jump where
+    # even the old top fell below the new low)
+    rank = jnp.sum(expired.T & (base.T < base), axis=1, keepdims=True)
+    expos = jnp.where(expired, jnp.maximum(old_high + 1, low) + rank, base)
+    rows = jnp.where(expired, jnp.broadcast_to(row0, rows.shape), rows)
+    values = jnp.where(expired, 0.0, values)
+    counts = jnp.where(expired, 0, counts)
+    return rows, values, counts, expos, m_new, expired
+
+
+def stream_sieve(mat: jax.Array, row0: jax.Array, rows: jax.Array,
+                 values: jax.Array, counts: jax.Array, expos: jax.Array,
+                 m_max: jax.Array, bvalid: jax.Array, k: int,
+                 eps_log: float, mode: str = "min"):
+    """Oracle for the batched sieve-streaming kernel
+    (kernels/stream_filter.py, DESIGN §Streaming): re-anchor the exponent
+    window on the batch's singleton gains, then admit arrivals IN ORDER
+    (admitting arrival b changes the state arrival b+1 sees — the
+    sequential semantics the kernel must reproduce bit-identically).
+
+    mat: (N, B) ground×arrival distance/similarity matrix; row0: (N,)
+    empty-solution state row; rows: (L, N) per-level state (mind for
+    'min'/k-medoid, curmax for 'max'/facility); values: (L,) RAW f(S_l)
+    (relu-sum units, no 1/N); counts: (L,) i32; expos: (L,) i32 grid
+    exponents (v_l = e^(expos·eps_log)); m_max: () running max singleton.
+
+    Returns (rows (L, N), values (L,), counts (L,), admits (L, B) f32
+    0/1, expos (L,), m_new (), expired (L,) f32 0/1).
+    """
+    m = mat.astype(F32)
+    l, b = rows.shape[0], mat.shape[1]
+    part0 = (jnp.maximum(row0[:, None] - m, 0.0) if mode == "min"
+             else jnp.maximum(m - row0[:, None], 0.0))     # (N, B)
+    singletons = jnp.sum(part0, axis=0, keepdims=True)     # (1, B)
+    rows, values, counts, expos, m_new, expired = sieve_reanchor(
+        singletons, bvalid.astype(F32).reshape(1, b), rows.astype(F32),
+        row0.astype(F32).reshape(1, -1), values.astype(F32).reshape(l, 1),
+        counts.reshape(l, 1), expos.reshape(l, 1).astype(jnp.int32),
+        m_max.astype(F32), eps_log)
+    vgrid = jnp.exp(expos.astype(F32) * eps_log)           # (L, 1)
+
+    def body(i, carry):
+        rows, values, counts, admits = carry
+        col = jax.lax.dynamic_slice_in_dim(m, i, 1, axis=1)[:, 0]  # (N,)
+        part = (jnp.maximum(rows - col[None, :], 0.0) if mode == "min"
+                else jnp.maximum(col[None, :] - rows, 0.0))        # (L, N)
+        gains = jnp.sum(part, axis=1, keepdims=True)               # (L, 1)
+        ok = jax.lax.dynamic_index_in_dim(bvalid, i, keepdims=False) > 0
+        admit = sieve_admit(gains, values, counts, vgrid, ok, k)
+        upd = (jnp.minimum(rows, col[None, :]) if mode == "min"
+               else jnp.maximum(rows, col[None, :]))
+        rows = jnp.where(admit, upd, rows)
+        values = values + jnp.where(admit, gains, 0.0)
+        counts = counts + admit.astype(jnp.int32)
+        admits = jax.lax.dynamic_update_slice_in_dim(
+            admits, admit.astype(F32), i, axis=1)
+        return rows, values, counts, admits
+
+    rows, values, counts, admits = jax.lax.fori_loop(
+        0, b, body, (rows, values, counts, jnp.zeros((l, b), F32)))
+    return (rows, values[:, 0], counts[:, 0], admits, expos[:, 0],
+            m_new, expired.astype(F32)[:, 0])
+
+
+def stream_sieve_cover(bits: jax.Array, covered: jax.Array,
+                       values: jax.Array, counts: jax.Array,
+                       expos: jax.Array, m_max: jax.Array,
+                       bvalid: jax.Array, k: int, eps_log: float):
+    """Coverage twin of `stream_sieve` over packed uint32 bitmaps.
+
+    bits: (B, W) arrival coverage bitmaps; covered: (L, W) per-level
+    covered sets; singleton gain = popcount(bits[b]), gain(l, b) =
+    popcount(bits[b] & ~covered[l]). Returns as stream_sieve.
+    """
+    l, b = covered.shape[0], bits.shape[0]
+    singletons = jnp.sum(jax.lax.population_count(bits)
+                         .astype(jnp.int32), axis=1,
+                         keepdims=True).astype(F32).T          # (1, B)
+    row0 = jnp.zeros((1, covered.shape[1]), covered.dtype)
+    covered, values, counts, expos, m_new, expired = sieve_reanchor(
+        singletons, bvalid.astype(F32).reshape(1, b), covered, row0,
+        values.astype(F32).reshape(l, 1), counts.reshape(l, 1),
+        expos.reshape(l, 1).astype(jnp.int32), m_max.astype(F32), eps_log)
+    vgrid = jnp.exp(expos.astype(F32) * eps_log)
+
+    def body(i, carry):
+        covered, values, counts, admits = carry
+        word = jax.lax.dynamic_slice_in_dim(bits, i, 1, axis=0)    # (1, W)
+        new = jnp.bitwise_and(word, jnp.bitwise_not(covered))      # (L, W)
+        gains = jnp.sum(jax.lax.population_count(new).astype(jnp.int32),
+                        axis=1, keepdims=True).astype(F32)         # (L, 1)
+        ok = jax.lax.dynamic_index_in_dim(bvalid, i, keepdims=False) > 0
+        admit = sieve_admit(gains, values, counts, vgrid, ok, k)
+        covered = jnp.where(admit, jnp.bitwise_or(covered, word), covered)
+        values = values + jnp.where(admit, gains, 0.0)
+        counts = counts + admit.astype(jnp.int32)
+        admits = jax.lax.dynamic_update_slice_in_dim(
+            admits, admit.astype(F32), i, axis=1)
+        return covered, values, counts, admits
+
+    covered, values, counts, admits = jax.lax.fori_loop(
+        0, b, body, (covered, values, counts, jnp.zeros((l, b), F32)))
+    return (covered, values[:, 0], counts[:, 0], admits, expos[:, 0],
+            m_new, expired.astype(F32)[:, 0])
+
+
 def kmedoid_update(ground: jax.Array, mind: jax.Array, chosen: jax.Array
                    ) -> jax.Array:
     """New per-ground-element min distance after adding `chosen` (D,)."""

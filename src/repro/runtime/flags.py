@@ -1,4 +1,4 @@
-"""Process-wide tracing flags.
+"""Process-wide tracing flags and typed environment knobs.
 
 ``UNROLL_SCANS`` — when True, every model/core lax.scan fully unrolls.
 Used ONLY by the dry-run's cost probes: XLA's HloCostAnalysis counts a
@@ -6,7 +6,24 @@ while-loop body ONCE regardless of trip count, so FLOP/collective accounting
 needs loop-free HLO. Production lowering keeps scans rolled (compile time,
 code size); the dry-run fits cost = intercept + slope·repeats from two
 small unrolled probes and extrapolates to the full depth (launch/dryrun.py).
+
+Environment knobs — every ``REPRO_*`` variable the kernels consult is read
+through a typed accessor here (ONE place to override in tests/benchmarks;
+``monkeypatch.setenv`` works because accessors re-read the environment on
+each call rather than caching at import):
+
+  REPRO_KERNEL_BACKEND    'auto' | 'pallas' | 'interpret' | 'ref'
+  REPRO_FUSED_CACHE_MB    HBM budget for the cached (N, C) matrix
+  REPRO_FUSED_VMEM_MB     per-block VMEM budget for the fused/loop kernels
+  REPRO_FUSED_CACHE_DTYPE 'auto' | 'f32' | 'bf16' cache storage dtype
+  REPRO_STREAM_VMEM_MB    VMEM budget for the stream-filter kernel
+                          (defaults to the fused VMEM budget)
+  REPRO_STREAM_BATCH      default arrival batch size for streaming drivers
 """
+from __future__ import annotations
+
+import os
+from typing import Optional
 
 UNROLL_SCANS: bool = False
 
@@ -14,3 +31,71 @@ UNROLL_SCANS: bool = False
 def scan_unroll():
     """Pass as lax.scan(..., unroll=scan_unroll())."""
     return True if UNROLL_SCANS else 1
+
+
+# ---------------------------------------------------------------------------
+# typed env accessors
+# ---------------------------------------------------------------------------
+
+KERNEL_BACKEND_ENV = "REPRO_KERNEL_BACKEND"
+FUSED_CACHE_MB_ENV = "REPRO_FUSED_CACHE_MB"
+FUSED_VMEM_MB_ENV = "REPRO_FUSED_VMEM_MB"
+FUSED_CACHE_DTYPE_ENV = "REPRO_FUSED_CACHE_DTYPE"
+STREAM_VMEM_MB_ENV = "REPRO_STREAM_VMEM_MB"
+STREAM_BATCH_ENV = "REPRO_STREAM_BATCH"
+
+_FUSED_CACHE_MB_DEFAULT = 2048.0
+_FUSED_VMEM_MB_DEFAULT = 8.0
+_STREAM_BATCH_DEFAULT = 128
+
+
+def _env_float(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
+def _env_int(name: str, default: int) -> int:
+    try:
+        return int(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
+def kernel_backend(override: Optional[str] = None) -> str:
+    """Resolve the kernel dispatch backend: explicit override wins, then
+    REPRO_KERNEL_BACKEND, then 'auto' (= compiled Pallas on TPU, jnp
+    reference elsewhere — CPU has no Mosaic backend)."""
+    b = override or os.environ.get(KERNEL_BACKEND_ENV, "auto")
+    if b == "auto":
+        import jax
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return b
+
+
+def fused_cache_mb() -> float:
+    """HBM budget (MB) for the fused engine's cached (N, C) matrix."""
+    return _env_float(FUSED_CACHE_MB_ENV, _FUSED_CACHE_MB_DEFAULT)
+
+
+def fused_vmem_mb() -> float:
+    """Per-block VMEM budget (MB) for the fused-step / loop kernels."""
+    return _env_float(FUSED_VMEM_MB_ENV, _FUSED_VMEM_MB_DEFAULT)
+
+
+def fused_cache_dtype() -> str:
+    """Cache storage dtype preference: 'auto' | 'f32' | 'bf16'."""
+    v = os.environ.get(FUSED_CACHE_DTYPE_ENV, "auto").lower()
+    return v if v in ("auto", "f32", "bf16") else "auto"
+
+
+def stream_vmem_mb() -> float:
+    """VMEM budget (MB) for the batched stream-filter kernel; falls back to
+    the fused VMEM budget so one knob shrinks every on-chip working set."""
+    return _env_float(STREAM_VMEM_MB_ENV, fused_vmem_mb())
+
+
+def stream_batch() -> int:
+    """Default arrival batch size B for the streaming drivers."""
+    return max(1, _env_int(STREAM_BATCH_ENV, _STREAM_BATCH_DEFAULT))

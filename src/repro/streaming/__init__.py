@@ -1,0 +1,10 @@
+"""Streaming submodular engine — sieve-streaming leaves, sliding windows,
+and the continuous distributed mode (DESIGN §Streaming)."""
+from repro.streaming.sieve import SieveState, SieveStreamer, num_levels
+from repro.streaming.window import SlidingSieve, WindowState
+from repro.streaming.driver import (stream_select, stream_select_continuous,
+                                    stream_select_distributed)
+
+__all__ = ["SieveState", "SieveStreamer", "num_levels", "SlidingSieve",
+           "WindowState", "stream_select", "stream_select_continuous",
+           "stream_select_distributed"]

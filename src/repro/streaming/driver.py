@@ -1,0 +1,262 @@
+"""Streaming selection drivers (DESIGN §Streaming).
+
+Three entry points over an arrival stream (any iterable of
+``(ids, payloads, valid)`` batches — data.synthetic.gen_stream is the
+canonical deterministic source):
+
+  * ``stream_select`` — single-device sieve over the whole stream, with
+    optional checkpoint/resume through checkpoint.manager (the sieve
+    state is one fixed-shape pytree, so a stream can stop and resume
+    bit-exactly).
+  * ``stream_select_continuous`` — the CONTINUOUS DISTRIBUTED mode on one
+    device: each of `lanes` simulated mesh lanes runs a local sieve over
+    its shard of every batch (one vmapped stream-filter dispatch), and
+    every `merge_every` batches the per-lane summaries are merged through
+    the GreedyML accumulation tree (sieve-as-leaf-solver: union the child
+    summaries, node-local Greedy, argmax{f(S), f(S_prev)}), then
+    select_better'd against the last merged solution — the stream's
+    current answer only ever improves between merges.
+  * ``stream_select_distributed`` — the same continuous mode on a REAL
+    mesh via shard_map: lanes are mesh devices, the merge reuses
+    core.greedyml.accumulate_levels (the exact Algorithm 3.1 rounds) with
+    the fixed evaluation set threaded in as per-level augmentation.
+
+For k-medoid/facility the sieve summarizes the stream against a FIXED
+evaluation ground set (`ground`) — the streaming analogue of the paper's
+§6.4 local objective; coverage needs none.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import manager
+from repro.core.greedy import Solution
+from repro.core.greedyml import _broadcast_from_root, accumulate_levels
+from repro.streaming.sieve import SieveStreamer
+
+F32 = jnp.float32
+
+
+def _empty_solution(k: int, payload_example: jax.Array) -> Solution:
+    pay = jnp.zeros((k,) + payload_example.shape[1:], payload_example.dtype)
+    return Solution(jnp.full((k,), -1, jnp.int32), pay,
+                    jnp.zeros((k,), bool), jnp.asarray(-jnp.inf, F32),
+                    jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# single-device arrival loop
+# ---------------------------------------------------------------------------
+
+
+def stream_select(objective, stream: Iterable, k: int, *, eps: float = 0.1,
+                  ground: Optional[jax.Array] = None,
+                  ground_valid: Optional[jax.Array] = None,
+                  backend: Optional[str] = None,
+                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                  resume: bool = False) -> Solution:
+    """Run the sieve over the whole stream; returns the best level's
+    solution. With ``ckpt_dir`` the sieve state is saved every
+    ``ckpt_every`` batches (and at the end); ``resume=True`` restores the
+    latest checkpoint and skips the already-consumed prefix of the (same,
+    deterministic) stream."""
+    streamer = SieveStreamer(objective, k, eps, ground=ground,
+                             ground_valid=ground_valid, backend=backend)
+    step = jax.jit(streamer.process_batch)
+    state, done = None, 0
+    if resume and ckpt_dir and manager.latest_step(ckpt_dir) is not None:
+        # example built from the streamer alone — consuming a batch here
+        # would silently desynchronize one-shot iterator streams
+        state, manifest = manager.restore(ckpt_dir, streamer.init())
+        done = int(manifest["extra"]["batches"])
+    for i, (ids, pay, valid) in enumerate(stream):
+        if i < done:
+            continue
+        ids, pay, valid = (jnp.asarray(ids), jnp.asarray(pay),
+                           jnp.asarray(valid))
+        if state is None:
+            state = streamer.init(pay)
+        state = step(state, ids, pay, valid)
+        done = i + 1
+        if ckpt_dir and ckpt_every and done % ckpt_every == 0:
+            manager.save(ckpt_dir, done, state,
+                         extra={"batches": done})
+    if state is None:
+        raise ValueError("empty stream")
+    if ckpt_dir:
+        manager.save(ckpt_dir, done, state, extra={"batches": done})
+    return streamer.solution(state)
+
+
+# ---------------------------------------------------------------------------
+# continuous distributed mode — simulated lanes (vmap) + tree merges
+# ---------------------------------------------------------------------------
+
+
+def stream_select_continuous(objective, stream: Iterable, k: int, *,
+                             lanes: int = 4, branching: int = 0,
+                             merge_every: int = 4, eps: float = 0.1,
+                             ground: Optional[jax.Array] = None,
+                             ground_valid: Optional[jax.Array] = None,
+                             backend: Optional[str] = None,
+                             node_engine: str = "auto"
+                             ) -> Tuple[Solution, dict]:
+    """Continuous mode with `lanes` vmapped lanes (the single-device
+    simulation of the mesh — core.simulate style). Returns the final
+    merged Solution plus an info dict with the merged-value trajectory.
+
+    Each batch is split equally across lanes (batch % lanes == 0); every
+    `merge_every` batches the per-lane sieve summaries run through a
+    T(lanes, b=branching or lanes) accumulation tree whose node-local
+    ground is the union of child summaries plus (vector objectives) the
+    fixed evaluation set — and the root is select_better'd against the
+    last merged solution, so the served answer is monotone between rounds.
+    The merge IS core.greedyml.accumulate_levels — the same Algorithm 3.1
+    rounds the shard_map driver runs — executed under nested vmap axes
+    (one named axis per tree level), so continuous and distributed modes
+    cannot drift semantically. ``lanes`` must equal branching^levels.
+    """
+    streamer = SieveStreamer(objective, k, eps, ground=ground,
+                             ground_valid=ground_valid, backend=backend)
+    step = jax.jit(jax.vmap(streamer.process_batch))
+    extract = jax.jit(jax.vmap(streamer.solution))
+    b = branching or lanes
+    levels = max(1, round(math.log(lanes, b))) if lanes > 1 else 0
+    assert b ** levels == lanes, \
+        f"lanes ({lanes}) must be branching^levels (b={b})"
+    axes = tuple(f"mrg{i}" for i in range(levels))
+    radices = [b] * levels
+    aug_levels = None
+    if ground is not None and levels:
+        aug_levels = jnp.broadcast_to(
+            streamer.ground[None], (levels,) + streamer.ground.shape)
+    states, merged = None, None
+    merges, done = [], 0
+
+    def merge_round(states, merged):
+        lane_sols = extract(states)
+
+        def fn(sol):
+            return accumulate_levels(objective, sol, k, axes, radices,
+                                     aug_levels=aug_levels,
+                                     node_engine=node_engine,
+                                     carry_prev=merged)
+
+        f = fn
+        for ax in axes:        # innermost level = innermost vmap
+            f = jax.vmap(f, axis_name=ax)
+        # lane index: level-0 digit is the LOW digit, so the row-major
+        # reshape (fastest-varying last axis) matches the tree arithmetic
+        grouped = jax.tree.map(
+            lambda x: x.reshape((b,) * levels + x.shape[1:]), lane_sols)
+        out = f(grouped)
+        # after the last gather+greedy all lanes hold identical solutions
+        return jax.tree.map(lambda x: x[(0,) * levels], out)
+
+    for i, (ids, pay, valid) in enumerate(stream):
+        ids, pay, valid = (jnp.asarray(ids), jnp.asarray(pay),
+                           jnp.asarray(valid))
+        nb = ids.shape[0]
+        assert nb % lanes == 0, f"batch {nb} must split over {lanes} lanes"
+        shp = (lanes, nb // lanes)
+        ids_l = ids.reshape(shp)
+        pay_l = pay.reshape(shp + pay.shape[1:])
+        val_l = valid.reshape(shp)
+        if states is None:
+            base = streamer.init(pay)
+            states = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (lanes,) + x.shape),
+                base)
+        states = step(states, ids_l, pay_l, val_l)
+        done = i + 1
+        if done % merge_every == 0:
+            merged = merge_round(states, merged)
+            merges.append(float(merged.value))
+    if states is None:
+        raise ValueError("empty stream")
+    if merged is None or done % merge_every != 0:
+        merged = merge_round(states, merged)
+        merges.append(float(merged.value))
+    return merged, {"merges": merges, "batches": done,
+                    "tree": (lanes, b, levels)}
+
+
+# ---------------------------------------------------------------------------
+# continuous distributed mode — real mesh (shard_map)
+# ---------------------------------------------------------------------------
+
+
+def stream_select_distributed(objective, stream: Iterable, k: int, mesh,
+                              tree_axes: Sequence[str], *,
+                              merge_every: int = 4, eps: float = 0.1,
+                              ground: Optional[jax.Array] = None,
+                              ground_valid: Optional[jax.Array] = None,
+                              backend: Optional[str] = None,
+                              node_engine: str = "auto"
+                              ) -> Tuple[Solution, dict]:
+    """Continuous mode over a real mesh: each lane sieves its shard of
+    every arrival batch, and merge rounds run the exact
+    core.greedyml.accumulate_levels recurrence (sieve-as-leaf-solver)
+    with the last merged solution carried as an extra competitor."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    radices = [mesh.shape[a] for a in tree_axes]
+    lanes = math.prod(radices)
+    streamer = SieveStreamer(objective, k, eps, ground=ground,
+                             ground_valid=ground_valid, backend=backend)
+    lane_spec = P(tuple(reversed(tree_axes)))
+    rep = P()
+
+    def step_fn(state, ids, pay, valid):
+        state1 = jax.tree.map(lambda x: x[0], state)
+        state1 = streamer.process_batch(state1, ids, pay, valid)
+        return jax.tree.map(lambda x: x[None], state1)
+
+    aug_levels = None
+    if streamer.kind == "vector":
+        aug_levels = jnp.broadcast_to(
+            streamer.ground[None], (len(tree_axes),) + streamer.ground.shape)
+
+    def merge_fn(state, carry):
+        sol = streamer.solution(jax.tree.map(lambda x: x[0], state))
+        out = accumulate_levels(objective, sol, k, tree_axes, radices,
+                                aug_levels=aug_levels,
+                                node_engine=node_engine, carry_prev=carry)
+        return _broadcast_from_root(out, tree_axes, radices)
+
+    step = shard_map(step_fn, mesh=mesh,
+                     in_specs=(lane_spec, lane_spec, lane_spec, lane_spec),
+                     out_specs=lane_spec, check_rep=False)
+    merge = shard_map(merge_fn, mesh=mesh, in_specs=(lane_spec, rep),
+                      out_specs=Solution(rep, rep, rep, rep, rep),
+                      check_rep=False)
+
+    states, merged = None, None
+    merges, done = [], 0
+    for i, (ids, pay, valid) in enumerate(stream):
+        ids, pay, valid = (jnp.asarray(ids), jnp.asarray(pay),
+                           jnp.asarray(valid))
+        nb = ids.shape[0]
+        assert nb % lanes == 0, f"batch {nb} must shard over {lanes} lanes"
+        if states is None:
+            base = streamer.init(pay)
+            states = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (lanes,) + x.shape),
+                base)
+            merged = _empty_solution(k, pay)
+        states = step(states, ids, pay, valid)
+        done = i + 1
+        if done % merge_every == 0:
+            merged = merge(states, merged)
+            merges.append(float(merged.value))
+    if states is None:
+        raise ValueError("empty stream")
+    if done % merge_every != 0:
+        merged = merge(states, merged)
+        merges.append(float(merged.value))
+    return merged, {"merges": merges, "batches": done, "lanes": lanes}

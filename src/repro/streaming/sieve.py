@@ -1,0 +1,205 @@
+"""Fixed-shape Sieve-Streaming (Badanidiyuru et al. 2014) — the online
+leaf solver of the streaming subsystem (DESIGN §Streaming).
+
+Sieve-Streaming keeps one partial solution per guess v of OPT on the
+geometric grid v = (1+ε)^j and admits an arriving element e into level v
+exactly when
+
+    gain(e | S_v)  ≥  (v/2 − f(S_v)) / (k − |S_v|)       and |S_v| < k,
+
+which guarantees max_v f(S_v) ≥ (1/2 − ε)·OPT. Only the exponent window
+J(m) = {j : m ≤ (1+ε)^j ≤ 2k·m} matters, where m is the running max
+singleton gain (OPT ∈ [m, k·m]); the window WIDTH is STATIC —
+L = ⌈log_{1+ε}(2k)⌉ + 2 levels, a function of k and ε only — while its
+POSITION is dynamic. Each batch first updates m from the batch's raw
+singleton gains and slides the window: slots whose exponent fell below
+the window (v < m ⇒ provably not OPT's sieve) are RECYCLED as fresh empty
+sieves at the next exponents above the window top, exactly the classic
+algorithm's create/discard at batch granularity — but with fixed shapes,
+so the whole update jits. An element arriving before its sieve's creation
+had singleton gain < v by construction, which is what the (1/2 − ε) proof
+needs; no ordering (including adversarial value-ascending ones) breaks
+the bound.
+
+Per-level partial solutions live in (L, k) id / (L, k, …) payload slots
+with counts giving validity — the same fixed-shape Solution convention as
+core.greedy. For the vector objectives (k-medoid / facility) the per-level
+state is an (L, N) stack of mind/curmax rows over a FIXED evaluation
+ground set (the 'query set' the stream is summarized against — the
+streaming analogue of the paper's §6.4 local objective); one arrival batch
+against all L levels is ONE Pallas dispatch (kernels/stream_filter.py,
+gated by ops.stream_plan). Coverage keeps (L, W) packed bitmaps and runs
+the jnp twin (ref.stream_sieve_cover). All values/thresholds are RAW
+(relu-sum / popcount) units; `solution()` normalizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.greedy import Solution
+from repro.kernels import ops, ref
+
+F32 = jnp.float32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SieveState:
+    rows: jax.Array       # (L, N) f32 mind/curmax | (L, W) uint32 covered
+    values: jax.Array     # (L,) f32 raw f(S_v)
+    counts: jax.Array     # (L,) i32 |S_v|
+    expos: jax.Array      # (L,) i32 grid exponents: v_l = (1+ε)^expos[l]
+    m_max: jax.Array      # () f32 running max raw singleton gain
+    ids: jax.Array        # (L, k) i32 admitted element ids (-1 = empty)
+    payloads: jax.Array   # (L, k, …) admitted payloads
+    evals: jax.Array      # () i32 marginal-gain evaluations
+
+    def tree_flatten(self):
+        return (self.rows, self.values, self.counts, self.expos,
+                self.m_max, self.ids, self.payloads, self.evals), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def num_levels(k: int, eps: float) -> int:
+    """Static sieve-level count: the exponent window {j : m ≤ (1+ε)^j ≤
+    2k·m} has width ⌈log_{1+ε}(2k)⌉ (+2 ceil/slide margin) regardless of
+    the dynamic m — rounded up to a sublane multiple so the (L, ·) stacks
+    need no level padding in the Pallas kernel (the extra levels just
+    extend the window top: more OPT guesses, benign)."""
+    width = int(math.ceil(math.log(2.0 * k) / math.log1p(eps))) + 2
+    return -(-width // 8) * 8
+
+
+class SieveStreamer:
+    """Objective-adapted sieve engine with jit-safe batch updates.
+
+    For k-medoid/facility pass ``ground``/``ground_valid`` — the fixed
+    evaluation set the summary is scored against. Coverage needs neither.
+    """
+
+    def __init__(self, objective, k: int, eps: float = 0.1,
+                 ground: Optional[jax.Array] = None,
+                 ground_valid: Optional[jax.Array] = None,
+                 backend: Optional[str] = None):
+        self.objective = objective
+        self.k = int(k)
+        self.eps = float(eps)
+        self.eps_log = math.log1p(float(eps))
+        self.backend = backend
+        self.levels = num_levels(k, eps)
+        self.kind = "cover" if objective.name == "coverage" else "vector"
+        if self.kind == "vector":
+            assert ground is not None, \
+                "vector objectives need a fixed evaluation ground set"
+            if ground_valid is None:
+                ground_valid = jnp.ones((ground.shape[0],), bool)
+            state0 = objective.init_state(ground, ground_valid)
+            self.ground = state0.ground
+            self.n_eff = state0.n_eff
+            if objective.name == "kmedoid":
+                self.mode, self.pw_mode = "min", "dist"
+                self.row0 = state0.mind
+            else:
+                self.mode, self.pw_mode = "max", "dot"
+                self.row0 = state0.curmax
+
+    # -- state construction --------------------------------------------------
+
+    def init(self, payload_example: Optional[jax.Array] = None
+             ) -> SieveState:
+        """Empty sieve: the exponent window self-anchors on the first
+        arrivals' singleton gains — no data peeking needed, so the state
+        can also be constructed without any stream in hand (checkpoint
+        restore builds its example tree this way)."""
+        L, k = self.levels, self.k
+        if self.kind == "vector":
+            rows = jnp.tile(self.row0[None, :], (L, 1))
+            tail, dtype = (self.ground.shape[1],), self.ground.dtype
+        else:
+            rows = jnp.zeros((L, self.objective.words), jnp.uint32)
+            tail, dtype = (self.objective.words,), jnp.uint32
+        if payload_example is not None:
+            tail, dtype = payload_example.shape[1:], payload_example.dtype
+        pay = jnp.zeros((L, k) + tuple(tail), dtype)
+        return SieveState(rows, jnp.zeros((L,), F32),
+                          jnp.zeros((L,), jnp.int32),
+                          jnp.arange(L, dtype=jnp.int32),
+                          jnp.zeros((), F32),
+                          jnp.full((L, k), -1, jnp.int32), pay,
+                          jnp.zeros((), jnp.int32))
+
+    # -- the batched arrival update ------------------------------------------
+
+    def process_batch(self, state: SieveState, ids: jax.Array,
+                      payloads: jax.Array, valid: jax.Array) -> SieveState:
+        """Fold one batch of B arrivals into all L sieve levels — the
+        re-anchor (singleton gains + window slide) and the sequential
+        admission run in ONE stream-filter dispatch; the host only resets
+        expired solution slots and scatters the admits. jit-safe."""
+        if self.kind == "cover":
+            rows, values, counts, admits, expos, m_new, expired = \
+                ref.stream_sieve_cover(
+                    payloads, state.rows, state.values, state.counts,
+                    state.expos, state.m_max, valid.astype(F32), self.k,
+                    self.eps_log)
+            admits, expired = admits > 0, expired > 0
+        else:
+            rows, values, counts, admits, expos, m_new, expired = \
+                ops.stream_filter(
+                    self.ground, payloads, state.rows, self.row0,
+                    state.values, state.counts, state.expos, state.m_max,
+                    valid, self.k, self.eps_log, pw_mode=self.pw_mode,
+                    mode=self.mode, backend=self.backend)
+        # expired levels were restarted inside the dispatch — clear their
+        # solution slots before scattering this batch's admits
+        exp_col = expired[:, None]
+        ids0 = jnp.where(exp_col, -1, state.ids)
+        keep = exp_col.reshape(exp_col.shape
+                               + (1,) * (state.payloads.ndim - 2))
+        pay0 = jnp.where(keep, jnp.zeros_like(state.payloads),
+                         state.payloads)
+        counts_before = jnp.where(expired, 0, state.counts)
+        new_ids, new_pay = _scatter_slots(
+            ids0, pay0, counts_before, admits, ids, payloads, self.k)
+        evals = state.evals + (self.levels
+                               * jnp.sum(valid.astype(jnp.int32)))
+        return SieveState(rows, values, counts, expos, m_new, new_ids,
+                          new_pay, evals)
+
+    # -- extraction ----------------------------------------------------------
+
+    def solution(self, state: SieveState) -> Solution:
+        """Best level's partial solution as a fixed-shape core Solution
+        (value normalized to the objective's units)."""
+        lvl = jnp.argmax(state.values)
+        norm = self.n_eff if self.kind == "vector" else jnp.asarray(1.0, F32)
+        slot_valid = (jnp.arange(self.k) < state.counts[lvl])
+        return Solution(state.ids[lvl], state.payloads[lvl], slot_valid,
+                        state.values[lvl] / norm, state.evals)
+
+
+def _scatter_slots(ids, payloads, counts_before, admits, batch_ids,
+                   batch_pay, k: int):
+    """Scatter this batch's admitted arrivals into the per-level (L, k)
+    solution slots. Within a batch, level l's admits land at consecutive
+    positions counts_before[l], counts_before[l]+1, … (the kernel admits
+    sequentially in arrival order)."""
+    adm = admits.astype(jnp.int32)                               # (L, B)
+    pos = counts_before[:, None] + jnp.cumsum(adm, axis=1) - adm  # (L, B)
+    slot = admits[:, :, None] & (pos[:, :, None]
+                                 == jnp.arange(k)[None, None, :])  # (L,B,k)
+    taken = jnp.any(slot, axis=1)                                # (L, k)
+    src = jnp.argmax(slot, axis=1)                               # (L, k)
+    new_ids = jnp.where(taken, jnp.take(batch_ids, src), ids)
+    gathered = jnp.take(batch_pay, src, axis=0)                  # (L, k, …)
+    keep = taken.reshape(taken.shape + (1,) * (batch_pay.ndim - 1))
+    new_pay = jnp.where(keep, gathered, payloads)
+    return new_ids, new_pay

@@ -1,0 +1,97 @@
+"""Sliding-window sieve summaries — recency-bounded streaming selection
+(DESIGN §Streaming).
+
+A single sieve never forgets: once admitted, an element stays in its level
+for the rest of the stream. For recency-bounded summaries ("the best k of
+the last W arrivals") we keep S + 1 CHECKPOINTED sieve states with starts
+staggered every s = W/S arrivals: at each stride boundary the oldest
+checkpoint is reset to a fresh empty sieve (same grid — no re-estimation
+of m̂), so at any instant the checkpoint ages are ≈ {0, s, 2s, …, W}.
+Queries answer from the oldest checkpoint whose age is ≤ W: it contains
+ONLY elements admitted in the last W arrivals (hard expiry guarantee) and
+covers at least W − s of them (the coverage slack of checkpointing —
+shrinking the stride tightens it at S× state cost).
+
+The S + 1 states are one stacked SieveState pytree (leading axis =
+checkpoint slot), so the per-batch update is a single vmapped
+stream-filter step; the roll/reset is a host-orchestrated slot overwrite
+between batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.greedy import Solution
+from repro.streaming.sieve import SieveState, SieveStreamer
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WindowState:
+    states: SieveState    # stacked, leading axis = S + 1 checkpoint slots
+    ages: jax.Array       # (S + 1,) i32 arrivals seen by each checkpoint
+    seen: jax.Array       # () i32 total arrivals seen
+
+    def tree_flatten(self):
+        return (self.states, self.ages, self.seen), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class SlidingSieve:
+    """Window of the last ``window`` arrivals, checkpointed every
+    ``stride`` (window % stride == 0; batches must divide the stride so
+    rolls land on batch boundaries)."""
+
+    def __init__(self, streamer: SieveStreamer, window: int, stride: int):
+        assert window % stride == 0, (window, stride)
+        self.streamer = streamer
+        self.window = int(window)
+        self.stride = int(stride)
+        self.n_ckpt = window // stride + 1
+        self._step = jax.jit(jax.vmap(streamer.process_batch,
+                                      in_axes=(0, None, None, None)))
+
+    def init(self, payloads: jax.Array) -> WindowState:
+        base = self.streamer.init(payloads)
+        states = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (self.n_ckpt,) + x.shape),
+            base)
+        return WindowState(states, jnp.zeros((self.n_ckpt,), jnp.int32),
+                           jnp.zeros((), jnp.int32))
+
+    def process_batch(self, wstate: WindowState, ids, payloads, valid
+                      ) -> WindowState:
+        """Advance every checkpoint by one batch, then roll (reset the
+        oldest slot) on stride boundaries. Host-orchestrated: the roll is
+        a slot overwrite between jitted steps."""
+        nb = ids.shape[0]
+        assert self.stride % nb == 0, \
+            f"batch {nb} must divide the stride {self.stride}"
+        states = self._step(wstate.states, ids, payloads, valid)
+        ages = wstate.ages + nb
+        seen = wstate.seen + nb
+        if int(seen) % self.stride == 0:
+            oldest = int(np.argmax(np.asarray(ages)))
+            # a fresh slot re-anchors its grid from its own arrivals
+            fresh = self.streamer.init(payloads)
+            states = jax.tree.map(lambda s, f: s.at[oldest].set(f),
+                                  states, fresh)
+            ages = ages.at[oldest].set(0)
+        return WindowState(states, ages, seen)
+
+    def query(self, wstate: WindowState) -> Solution:
+        """Best summary of (at most) the last ``window`` arrivals: answer
+        from the oldest checkpoint with age ≤ window — it never contains
+        an expired element."""
+        ages = np.asarray(wstate.ages)
+        eligible = np.nonzero(ages <= self.window)[0]
+        slot = int(eligible[np.argmax(ages[eligible])])
+        state = jax.tree.map(lambda x: x[slot], wstate.states)
+        return self.streamer.solution(state)

@@ -102,6 +102,33 @@ def test_mega_constrained_falls_back_identically(name):
     assert np.all(counts <= np.asarray(caps))
 
 
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("name", ["kmedoid", "facility"])
+def test_mega_constrained_parity_on_resident_tier(name, backend):
+    """PartitionMatroid at the accumulation-node (VMEM-resident) shape:
+    the constraint branch must produce step-identical selections when the
+    tier gate says 'resident' too — on the Pallas backends the fused
+    per-step fallback then runs real kernels over the resident-tier plan,
+    not just the ref oracle."""
+    ids, x, valid = _points(n=128)
+    plan = ops.fused_plan(x.shape[0], x.shape[0], d=x.shape[1],
+                          backend=backend)
+    assert plan["tier"] == "resident"
+    n = ids.shape[0]
+    cats = jnp.asarray(np.arange(n) % 4, jnp.int32)
+    caps = jnp.asarray([3, 2, 4, 1], jnp.int32)
+    obj = make_objective(name, backend=backend)
+    a = greedy(obj, ids, x, valid, 10, engine="step",
+               constraint=PartitionMatroid(cats, caps))
+    b = greedy(obj, ids, x, valid, 10, engine="mega",
+               constraint=PartitionMatroid(cats, caps))
+    _assert_same_selection(a, b, value_tol=1e-4)
+    sel = np.asarray(b.ids)[np.asarray(b.valid)]
+    counts = np.bincount(np.asarray(cats)[sel], minlength=4)
+    assert np.all(counts <= np.asarray(caps))
+    assert int(b.valid.sum()) == int(np.asarray(caps).sum())
+
+
 def test_mega_accumulation_node_shape_resident():
     """Accumulation-node style call (candidate pool ≠ evaluation set,
     augment rows): the shape must land on the resident tier and match the

@@ -1,0 +1,278 @@
+"""Streaming subsystem (DESIGN §Streaming): sieve/oracle parity across
+backends, batched-filter dispatch count, window expiry, checkpoint resume,
+and the (1/2 − ε) sieve quality bound against offline greedy on gen_stream
+suites across orderings — for all three objective families.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.functions import make_objective
+from repro.core.greedy import greedy
+from repro.core.simulate import global_value
+from repro.data.synthetic import gen_stream
+from repro.kernels import ops, ref
+from repro.streaming import (SieveStreamer, SlidingSieve, num_levels,
+                             stream_select, stream_select_continuous)
+
+K = 8
+UNIVERSE = 384
+
+
+def _setup(name, n=256, batch=64, order="shuffled", seed=0, d=24):
+    st = gen_stream(name, n, d=d, universe=UNIVERSE, batch=batch,
+                    order=order, seed=seed)
+    if name == "kcover":
+        obj = make_objective("kcover", universe=UNIVERSE, backend="ref")
+        ground = None
+    else:
+        obj = make_objective(name, backend="ref")
+        ground = jnp.asarray(st.payloads)
+    return st, obj, ground
+
+
+def _ids(sol):
+    return np.asarray(sol.ids)[np.asarray(sol.valid)]
+
+
+# ---------------------------------------------------------------------------
+# kernel ↔ oracle parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,pw", [("min", "dist"), ("max", "dot")])
+def test_stream_filter_interpret_matches_ref(mode, pw):
+    """The Pallas batch-filter kernel must make bit-identical admit and
+    re-anchor decisions to the jnp oracle (and match its states
+    numerically) — checked over two chained batches so the second one
+    exercises the window slide against a non-trivial m."""
+    import math
+    rng = np.random.default_rng(0)
+    n, d, b, l, k = 60, 24, 33, 16, 5
+    eps_log = math.log1p(0.1)
+    ground = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    row0 = (jnp.linalg.norm(ground, axis=1) if mode == "min"
+            else jnp.zeros((n,)))
+    batches = [(jnp.asarray((0.5 + i) * rng.normal(size=(b, d))
+                            .astype(np.float32)),
+                jnp.asarray(rng.random(b) > 0.15)) for i in range(2)]
+    out = {}
+    for backend in ("ref", "interpret"):
+        rows = jnp.tile(row0[None], (l, 1))
+        values = jnp.zeros((l,))
+        counts = jnp.zeros((l,), jnp.int32)
+        expos = jnp.arange(l, dtype=jnp.int32)
+        m_max = jnp.zeros(())
+        for batch, bvalid in batches:
+            (rows, values, counts, admits, expos, m_max,
+             expired) = ops.stream_filter(
+                ground, batch, rows, row0, values, counts, expos, m_max,
+                bvalid, k, eps_log, pw_mode=pw, mode=mode,
+                backend=backend)
+        out[backend] = (rows, values, counts, admits, expos, m_max,
+                        expired)
+    r, it = out["ref"], out["interpret"]
+    assert int(jnp.sum(r[2])) > 0            # something was admitted
+    for i in (3, 4, 6):                      # admits, expos, expired: exact
+        np.testing.assert_array_equal(np.asarray(r[i]), np.asarray(it[i]))
+    np.testing.assert_array_equal(np.asarray(r[2]), np.asarray(it[2]))
+    for i in (0, 1, 5):                      # rows, values, m: numeric
+        np.testing.assert_allclose(np.asarray(r[i]), np.asarray(it[i]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["kmedoid", "facility"])
+def test_sieve_selections_identical_across_backends(name):
+    """Full sieve runs must pick the same elements on ref and interpret."""
+    st, _, _ = _setup(name, n=192, batch=48)
+    sols = {}
+    for backend in ("ref", "interpret"):
+        obj = make_objective(name, backend="ref")
+        sols[backend] = stream_select(obj, st, K,
+                                      ground=jnp.asarray(st.payloads),
+                                      backend=backend)
+    np.testing.assert_array_equal(np.asarray(sols["ref"].ids),
+                                  np.asarray(sols["interpret"].ids))
+    np.testing.assert_array_equal(np.asarray(sols["ref"].valid),
+                                  np.asarray(sols["interpret"].valid))
+
+
+def test_stream_filter_is_one_dispatch_per_batch():
+    """Jaxpr-counted (as in bench_selection.py): one arrival batch against
+    ALL sieve levels must lower to exactly ONE pallas_call."""
+    obj = make_objective("facility", backend="interpret")
+    ground = jnp.asarray(np.random.default_rng(0)
+                         .normal(size=(64, 24)).astype(np.float32))
+    streamer = SieveStreamer(obj, K, ground=ground, backend="interpret")
+    state = jax.eval_shape(
+        lambda p: streamer.init(p),
+        jax.ShapeDtypeStruct((32, 24), jnp.float32))
+    jaxpr = jax.make_jaxpr(streamer.process_batch)(
+        state, jax.ShapeDtypeStruct((32,), jnp.int32),
+        jax.ShapeDtypeStruct((32, 24), jnp.float32),
+        jax.ShapeDtypeStruct((32,), jnp.bool_))
+    assert ops.count_pallas_dispatches(jaxpr.jaxpr) == 1
+
+
+def test_stream_plan_vmem_gate(monkeypatch):
+    assert ops.stream_plan(256, 32, 128, 64, backend="ref") == {
+        "tier": "ref"}
+    plan = ops.stream_plan(256, 32, 128, 64, backend="interpret")
+    assert plan == {"tier": "kernel"}
+    monkeypatch.setenv("REPRO_STREAM_VMEM_MB", "0.05")
+    assert ops.stream_plan(256, 32, 128, 64, backend="interpret") is None
+    # squeezed plan must still produce correct (oracle-path) selections
+    st, obj, ground = _setup("facility", n=128, batch=32)
+    sol = stream_select(obj, st, K, ground=ground, backend="interpret")
+    monkeypatch.delenv("REPRO_STREAM_VMEM_MB")
+    ref_sol = stream_select(obj, st, K, ground=ground, backend="ref")
+    np.testing.assert_array_equal(np.asarray(sol.ids),
+                                  np.asarray(ref_sol.ids))
+
+
+# ---------------------------------------------------------------------------
+# quality bound
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["kcover", "kmedoid", "facility"])
+@pytest.mark.parametrize("order", ["shuffled", "adversarial", "drift"])
+def test_sieve_quality_bound(name, order):
+    """Sieve value ≥ (1/2 − ε)·offline greedy (greedy ≤ OPT, so this is
+    implied by the sieve's (1/2 − ε)·OPT guarantee) on every ordering."""
+    eps = 0.1
+    st, obj, ground = _setup(name, n=320, batch=64, order=order, seed=3)
+    sol = stream_select(obj, st, K, eps=eps, ground=ground, backend="ref")
+    gv = global_value(name, st.payloads, _ids(sol), UNIVERSE)
+    g = greedy(obj, jnp.arange(st.n, dtype=jnp.int32),
+               jnp.asarray(st.payloads), jnp.ones(st.n, bool), K)
+    ggv = global_value(name, st.payloads, _ids(g), UNIVERSE)
+    assert gv >= (0.5 - eps) * ggv, (name, order, gv, ggv)
+
+
+@pytest.mark.parametrize("name", ["kcover", "kmedoid", "facility"])
+def test_continuous_distributed_quality(name):
+    """The continuous mode's merged solution must clear the same
+    (1/2 − ε) bound on all three objective families (acceptance)."""
+    eps = 0.1
+    st, obj, ground = _setup(name, n=320, batch=64, order="drift", seed=5)
+    sol, info = stream_select_continuous(
+        obj, st, K, lanes=4, merge_every=2, eps=eps, ground=ground,
+        backend="ref")
+    gv = global_value(name, st.payloads, _ids(sol), UNIVERSE)
+    g = greedy(obj, jnp.arange(st.n, dtype=jnp.int32),
+               jnp.asarray(st.payloads), jnp.ones(st.n, bool), K)
+    ggv = global_value(name, st.payloads, _ids(g), UNIVERSE)
+    assert gv >= (0.5 - eps) * ggv, (name, gv, ggv)
+    assert len(info["merges"]) >= 2
+    # select_better against the last merged solution ⇒ monotone rounds
+    assert all(b >= a - 1e-6 for a, b in zip(info["merges"],
+                                             info["merges"][1:]))
+
+
+# ---------------------------------------------------------------------------
+# sliding window
+# ---------------------------------------------------------------------------
+
+
+def test_window_expiry_correctness():
+    """No element outside the last W arrivals ever appears in the
+    window summary."""
+    window, stride, batch = 64, 32, 16
+    st, obj, ground = _setup("facility", n=288, batch=batch, order="drift",
+                             seed=7)
+    streamer = SieveStreamer(obj, K, ground=ground, backend="ref")
+    win = SlidingSieve(streamer, window, stride)
+    wstate, arrived = None, []
+    for ids, pay, valid in st:
+        ids, pay, valid = (jnp.asarray(ids), jnp.asarray(pay),
+                           jnp.asarray(valid))
+        if wstate is None:
+            wstate = win.init(pay)
+        wstate = win.process_batch(wstate, ids, pay, valid)
+        arrived.extend(np.asarray(ids).tolist())
+        picked = set(_ids(win.query(wstate)).tolist())
+        assert picked <= set(arrived[-window:]), \
+            f"expired elements leaked at arrival {len(arrived)}"
+    assert wstate is not None and len(picked) > 0
+
+
+def test_window_tracks_drift_better_than_global_tail():
+    """After a drifting stream, the window summary is all-recent while the
+    unwindowed sieve typically keeps early elements (sanity that windows
+    actually bound recency, not a quality claim)."""
+    st, obj, ground = _setup("facility", n=256, batch=32, order="drift",
+                             seed=11)
+    sol = stream_select(obj, st, K, ground=ground, backend="ref")
+    order_pos = {int(e): i for i, e in enumerate(st.order)}
+    global_oldest = min(order_pos[int(e)] for e in _ids(sol))
+    assert global_oldest < 128          # global summary reaches far back
+    streamer = SieveStreamer(obj, K, ground=ground, backend="ref")
+    win = SlidingSieve(streamer, 64, 32)
+    wstate = None
+    for ids, pay, valid in st:
+        ids, pay, valid = (jnp.asarray(ids), jnp.asarray(pay),
+                           jnp.asarray(valid))
+        wstate = win.init(pay) if wstate is None else wstate
+        wstate = win.process_batch(wstate, ids, pay, valid)
+    w_oldest = min(order_pos[int(e)] for e in _ids(win.query(wstate)))
+    assert w_oldest >= 256 - 64
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_stream_checkpoint_resume_bitexact(tmp_path):
+    st, obj, ground = _setup("facility", n=192, batch=48)
+    full = stream_select(obj, st, K, ground=ground, backend="ref")
+    half = list(st.batches())[:2]
+    stream_select(obj, half, K, ground=ground, backend="ref",
+                  ckpt_dir=str(tmp_path), ckpt_every=1)
+    resumed = stream_select(obj, st, K, ground=ground, backend="ref",
+                            ckpt_dir=str(tmp_path), resume=True)
+    np.testing.assert_array_equal(np.asarray(full.ids),
+                                  np.asarray(resumed.ids))
+    np.testing.assert_array_equal(np.asarray(full.valid),
+                                  np.asarray(resumed.valid))
+    np.testing.assert_allclose(float(full.value), float(resumed.value),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pieces
+# ---------------------------------------------------------------------------
+
+
+def test_num_levels_static_and_modest():
+    assert num_levels(8, 0.1) == num_levels(8, 0.1)
+    assert 10 < num_levels(8, 0.1) < 80
+    assert num_levels(64, 0.1) > num_levels(8, 0.1)
+
+
+def test_gen_stream_orderings_deterministic():
+    for order in ("shuffled", "adversarial", "drift"):
+        a = gen_stream("facility", 64, d=8, batch=16, order=order, seed=1)
+        b = gen_stream("facility", 64, d=8, batch=16, order=order, seed=1)
+        np.testing.assert_array_equal(a.order, b.order)
+        assert sorted(a.order.tolist()) == list(range(64))
+    adv = gen_stream("kcover", 64, universe=256, batch=16,
+                     order="adversarial", seed=1)
+    sizes = np.unpackbits(adv.payloads.view(np.uint8),
+                          axis=1).sum(1)[adv.order]
+    assert sizes[0] <= sizes[-1]        # biggest singletons arrive last
+    # last partial batch is padded with valid=False
+    batches = list(gen_stream("facility", 70, d=8, batch=16, seed=0))
+    assert batches[-1][0].shape == (16,)
+    assert int(np.sum([b[2].sum() for b in batches])) == 70
+
+
+def test_select_coreset_stream_spec():
+    from repro.data.selection import select_coreset
+    emb = np.asarray(gen_stream("facility", 128, d=16, seed=2).payloads)
+    idx = select_coreset(emb, 6, spec="stream:facility", stream_batch=32)
+    assert 0 < len(idx) <= 6
+    assert np.all((idx >= 0) & (idx < 128))
