@@ -6,8 +6,15 @@ with per-objective step time, gains-kernel effective GB/s, evals/s, the
 kernel-call/FLOP model, and a COUNTED dispatch column: Pallas kernel
 dispatches per greedy are read off the traced jaxpr (scan bodies × trip
 count), verifying the k+1 → 2 (streaming megakernel) → 1 (VMEM-resident
-megakernel, the accumulation-node shape) reduction rather than asserting
-it from the model.
+megakernel / bitmap rules) reduction rather than asserting it from the
+model.
+
+Since the objective-protocol refactor the engine matrix is REGISTRY-DRIVEN:
+``objective_matrix`` sweeps every objective in core.objective.registry()
+across every tier — coverage now has real fused/mega columns (its cached
+matrix is a transposed bitmap stack, so even 'prepare' is dispatch-free)
+and any newly registered spec shows up automatically — emitting
+``benchmarks/BENCH_objectives.json``.
 
 Two backends are measured:
 
@@ -33,16 +40,20 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.functions import make_objective
+from repro.core.objective import make_objective, registry
 from repro.core.greedy import greedy
 from repro.data.synthetic import gen_images, gen_kcover, pack_bitmaps
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_selection.json")
+OBJ_PATH = os.path.join(os.path.dirname(__file__), "BENCH_objectives.json")
 
 HEADLINE = dict(n=4096, d=256, k=32)          # acceptance config (C = N)
 SMALL = dict(n=1024, d=256, k=16)
 NODE = dict(n=256, d=128, k=16)               # accumulation-node shape
                                               # (b·k candidates; resident)
+MATRIX = dict(n=512, d=64, k=16, universe=2048)   # registry-sweep config
+
+ENGINES = ("step", "fused", "mega")
 
 
 def _count_pallas_dispatches(jaxpr) -> int:
@@ -51,18 +62,30 @@ def _count_pallas_dispatches(jaxpr) -> int:
     return count_pallas_dispatches(jaxpr)
 
 
-def _dispatch_counts(name, n, d, k):
+def _pool(name, n, d, universe=0, seed=0):
+    """Candidate pool in the objective's payload representation."""
+    obj = make_objective(name, universe=universe or n, backend="ref")
+    if obj.rule.is_bitmap:
+        u = universe or n
+        pay = jnp.asarray(pack_bitmaps(gen_kcover(n, u, seed=seed), u))
+    else:
+        pay = jnp.asarray(gen_images(n, d, classes=16, seed=seed))
+    return jnp.arange(n, dtype=jnp.int32), pay, jnp.ones(n, bool)
+
+
+def _dispatch_counts(name, ids, pay, valid, k, universe=0):
     """Counted dispatches per greedy for each engine (interpret backend —
-    same kernel structure as compiled TPU, trace only, nothing runs)."""
-    obj = make_objective(name, backend="interpret")
-    x = jax.ShapeDtypeStruct((n, d), jnp.float32)
-    ids = jax.ShapeDtypeStruct((n,), jnp.int32)
-    valid = jax.ShapeDtypeStruct((n,), jnp.bool_)
+    same kernel structure as compiled TPU, trace only, nothing runs).
+    Takes the caller's pool — only its shapes/dtypes matter here."""
+    n = ids.shape[0]
+    obj = make_objective(name, universe=universe or n, backend="interpret")
     out = {}
-    for engine in ("step", "fused", "mega"):
+    for engine in ENGINES:
         fn = lambda i, p, v: greedy(obj, i, p, v, k, engine=engine)
-        out[engine] = _count_pallas_dispatches(
-            jax.make_jaxpr(fn)(ids, x, valid).jaxpr)
+        out[engine] = _count_pallas_dispatches(jax.make_jaxpr(fn)(
+            jax.ShapeDtypeStruct(ids.shape, ids.dtype),
+            jax.ShapeDtypeStruct(pay.shape, pay.dtype),
+            jax.ShapeDtypeStruct(valid.shape, valid.dtype)).jaxpr)
     return out
 
 
@@ -79,19 +102,27 @@ def _time_greedy(obj, ids, pay, valid, k, engine, reps=1):
     return best, sol
 
 
-def _vector_objective_rows(name, n, d, k, backends):
-    from repro.kernels import ops
-    x = jnp.asarray(gen_images(n, d, classes=16, seed=0))
-    ids = jnp.arange(n, dtype=jnp.int32)
-    valid = jnp.ones(n, bool)
-    dispatches = _dispatch_counts(name, n, d, k)
+def _plan_tier(obj, pay):
+    from repro.kernels import plans
+    state = jax.eval_shape(
+        lambda p, v: obj.init_state(p, v),
+        jax.ShapeDtypeStruct(pay.shape, pay.dtype),
+        jax.ShapeDtypeStruct((pay.shape[0],), jnp.bool_))
+    plan = plans.select_engine(obj.rule, *obj.plan_dims(state, pay),
+                               requested="mega", backend=obj.backend)
+    return plan.tier or "fallback"
+
+
+def _objective_rows(name, n, d, k, backends, universe=0):
+    ids, pay, valid = _pool(name, n, d, universe)
+    dispatches = _dispatch_counts(name, ids, pay, valid, k, universe)
     out = {}
     for backend in backends:
-        obj = make_objective(name, backend=backend)
-        plan = ops.fused_plan(n, n, d=d, backend=backend)
-        t_step, sol_s = _time_greedy(obj, ids, x, valid, k, "step")
-        t_fused, sol_f = _time_greedy(obj, ids, x, valid, k, "fused")
-        t_mega, sol_m = _time_greedy(obj, ids, x, valid, k, "mega")
+        obj = make_objective(name, universe=universe or n, backend=backend)
+        tier = _plan_tier(obj, pay)
+        t_step, sol_s = _time_greedy(obj, ids, pay, valid, k, "step")
+        t_fused, sol_f = _time_greedy(obj, ids, pay, valid, k, "fused")
+        t_mega, sol_m = _time_greedy(obj, ids, pay, valid, k, "mega")
         assert (sol_s.ids == sol_f.ids).all(), "engines must agree"
         assert (sol_s.ids == sol_m.ids).all(), "megakernel must agree"
         evals = int(sol_m.evals)
@@ -114,24 +145,42 @@ def _vector_objective_rows(name, n, d, k, backends):
             # counted from the jaxpr (interpret trace), not modeled:
             dispatches_step=dispatches["step"],
             dispatches_fused=dispatches["fused"],   # prepare + k steps
-            dispatches_mega=dispatches["mega"],     # 2 streaming, 1 resident
-            mega_tier=plan["tier"] if plan else "fallback",
+            dispatches_mega=dispatches["mega"],     # 2 streaming, 1 res/bits
+            mega_tier=tier,
         )
     return out
 
 
-def _coverage_row(n, universe, k):
-    from repro.kernels import ops
-    bm = jnp.asarray(pack_bitmaps(gen_kcover(n, universe, seed=0),
-                                  universe))
-    ids = jnp.arange(n, dtype=jnp.int32)
-    obj = make_objective("kcover", universe=universe)
-    t_step, sol = _time_greedy(obj, ids, bm, jnp.ones(n, bool), k, "step")
-    return {ops._backend(None): dict(
-        wall_step_s=round(t_step, 4),
-        step_time_ms=round(t_step / k * 1e3, 3),
-        evals_per_s=round(int(sol.evals) / max(t_step, 1e-9), 1),
-        note="no cacheable matrix; per-step engine on both paths")}
+def objective_matrix(cfg=MATRIX):
+    """REGISTRY-DRIVEN per-objective × per-tier matrix → BENCH_objectives.
+
+    One row per (registered objective × engine tier) with interpret wall
+    time and the jaxpr-counted dispatch column; coverage rides the
+    fused/mega tiers like everything else since the protocol refactor."""
+    n, d, k, universe = cfg["n"], cfg["d"], cfg["k"], cfg["universe"]
+    matrix = {}
+    for name in registry():
+        ids, pay, valid = _pool(name, n, d, universe)
+        dispatches = _dispatch_counts(name, ids, pay, valid, k, universe)
+        obj = make_objective(name, universe=universe, backend="interpret")
+        tier = _plan_tier(obj, pay)
+        row = {"mega_tier": tier, "payload": ("bitmap" if obj.rule.is_bitmap
+                                              else "features")}
+        walls = {e: _time_greedy(obj, ids, pay, valid, k, e)[0]
+                 for e in ENGINES}
+        for engine in ENGINES:
+            row[engine] = dict(
+                wall_s=round(walls[engine], 4),
+                speedup_vs_step=round(walls["step"]
+                                      / max(walls[engine], 1e-9), 2),
+                dispatches=dispatches[engine])
+        matrix[name] = row
+    results = dict(config=dict(cfg, device=jax.default_backend(),
+                               backend="interpret"),
+                   objectives=matrix)
+    with open(OBJ_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+    return results
 
 
 def flop_model(n, c, d, k):
@@ -149,19 +198,21 @@ def run(full: bool = False):
         config=dict(n=n, c=n, d=d, k=k, full=full,
                     device=jax.default_backend()),
         objectives={
-            "kmedoid": _vector_objective_rows("kmedoid", n, d, k,
-                                              ("interpret", "ref")),
-            "facility": _vector_objective_rows("facility", n, d, k,
-                                               ("interpret", "ref")),
-            "coverage": _coverage_row(min(n, 4096), min(n, 4096), k),
+            "kmedoid": _objective_rows("kmedoid", n, d, k,
+                                       ("interpret", "ref")),
+            "facility": _objective_rows("facility", n, d, k,
+                                        ("interpret", "ref")),
+            "coverage": _objective_rows("coverage", min(n, 4096), d, k,
+                                        ("interpret", "ref"),
+                                        universe=min(n, 4096)),
         },
         # accumulation-node shape (b·k candidates): the megakernel's
         # VMEM-resident tier — whole greedy in ONE dispatch
         accumulation_node=dict(
             config=NODE,
-            kmedoid=_vector_objective_rows(
+            kmedoid=_objective_rows(
                 "kmedoid", NODE["n"], NODE["d"], NODE["k"], ("interpret",)),
-            facility=_vector_objective_rows(
+            facility=_objective_rows(
                 "facility", NODE["n"], NODE["d"], NODE["k"],
                 ("interpret",)),
         ),
@@ -184,7 +235,18 @@ def run(full: bool = False):
     return results, out_path
 
 
-def main(full: bool = False):
+def main(full: bool = False, matrix_only: bool = False):
+    if matrix_only:
+        res = objective_matrix()
+        print("objective,engine,wall_s,speedup_vs_step,dispatches,tier")
+        for name, row in res["objectives"].items():
+            for engine in ENGINES:
+                r = row[engine]
+                print(f"{name},{engine},{r['wall_s']},"
+                      f"{r['speedup_vs_step']},{r['dispatches']},"
+                      f"{row['mega_tier']}")
+        print(f"wrote {OBJ_PATH}")
+        return res
     res, out_path = run(full)
     rows = []
     print("objective,backend,wall_step_s,wall_fused_s,wall_mega_s,"
@@ -207,11 +269,15 @@ def main(full: bool = False):
     print(f"flop_model@N={fm['n']},C={fm['c']},D={fm['d']},k={fm['k']}: "
           f"{fm['speedup']}x ({fm['step_flops']:.3g} -> "
           f"{fm['fused_flops']:.3g} flops)")
-    print(f"wrote {out_path}")
+    objective_matrix()
+    print(f"wrote {out_path} and {OBJ_PATH}")
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    main(ap.parse_args().full)
+    ap.add_argument("--matrix-only", action="store_true",
+                    help="only the registry-sweep objective×tier matrix")
+    args = ap.parse_args()
+    main(args.full, args.matrix_only)

@@ -17,6 +17,32 @@ echo "== megakernel parity (REPRO_KERNEL_BACKEND=interpret) =="
 REPRO_KERNEL_BACKEND=interpret python -m pytest -q \
     tests/test_megakernel.py
 
+echo "== objective registry sweep (conformance per registered spec) =="
+# every registered objective must pass the generic conformance suite
+# under interpret mode — registering a spec that fails conformance (or
+# isn't exercised by the suite at all) fails CI here
+OBJECTIVES=$(python -c "from repro.core.objective import registry; \
+print(' '.join(registry()))")
+echo "registry: ${OBJECTIVES}"
+for obj in ${OBJECTIVES}; do
+    # a registered name that matches NO conformance test is a failure in
+    # its own right — check collection first so the diagnosis is
+    # accurate (pytest would otherwise exit 5 on the empty selection)
+    n=$(python -m pytest --collect-only -q \
+        tests/test_objective_protocol.py -k "${obj}" 2>/dev/null \
+        | grep -c "::" || true)
+    if [ "${n}" -eq 0 ]; then
+        echo "FAIL: objective '${obj}' is not covered by the conformance suite"
+        exit 1
+    fi
+    echo "-- conformance: ${obj} (${n} tests) --"
+    REPRO_KERNEL_BACKEND=interpret python -m pytest -q \
+        tests/test_objective_protocol.py -k "${obj}" || {
+        echo "FAIL: objective '${obj}' does not pass the conformance suite"
+        exit 1
+    }
+done
+
 echo "== streaming engine (REPRO_KERNEL_BACKEND=interpret) =="
 REPRO_KERNEL_BACKEND=interpret python -m pytest -q \
     tests/test_streaming.py

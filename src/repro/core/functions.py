@@ -1,320 +1,18 @@
-"""Submodular objectives with a fixed-shape, JAX-native interface.
+"""Compatibility façade — objectives live in core/objective.py.
 
-Every objective operates on fixed-width element *payloads* so solutions can
-move through collectives with static shapes:
-
-  * k-cover / k-dominating-set — packed uint32 universe bitmaps (C, W)
-    (the TPU-dense representation; the CPU lazy simulator uses the paper's
-    sparse adjacency lists — DESIGN §4)
-  * k-medoid / facility-location — feature vectors (C, D)
-
-Interface (all methods jit-safe, fixed shapes):
-  init_state(ground, ground_valid) → state     state of an EMPTY solution
-  gains(state, cands, cand_valid)  → (C,) marginal gains (−inf if invalid)
-  update(state, payload)           → state after adding one element
-  value(state)                     → f(S) under this node's evaluation set
-
-Fused selection engine (optional, DESIGN §Perf) — precompute-once /
-reduce-per-step instead of recompute-everything-per-step:
-  prepare(state, cands, cand_valid) → (matrix, plan) | None
-      One-time O(N·C·D) cached ground×candidate matrix plus the
-      trace-time fused_plan dict (threaded through every step so the
-      row block is not re-derived k times); None when the objective has
-      no cacheable structure (coverage) or the matrix exceeds the
-      memory budget (ops.fused_plan) — callers then fall back to the
-      per-step gains/update path.
-  fused_step(state, cache, cand_mask, prev) → (state, best, gain)
-      One selection step: deferred prev-winner column update + masked
-      gains + on-chip argmax, all over the cached matrix (O(N·C)).
-  flush_pending(state, cache, prev) → state
-      Fold the final accepted winner's column after the scan.
-  megakernel_loop(state, cands, cand_valid, k)
-      → (state, bests, gains) | None
-      The whole-greedy megakernel (kernels/greedy_loop.py): ALL k
-      selection steps in one dispatch. The fused_plan tier gate picks
-      VMEM-resident (matrix built on-chip, 1 dispatch — the
-      accumulation-node shape) or streaming (HBM cache re-read per
-      step, 2 dispatches incl. prepare); None when neither tier fits —
-      callers drop to the engines above.
-  replay_batch(state, payloads, valid) → state
-      All k solution elements folded into a fresh state in ONE pairwise
-      kernel call (replaces the sequential k-step update scan).
-
-For k-medoid/facility the evaluation ground set is the node's local data
-(paper §6.4 'local objective'); internal tree nodes therefore rebuild state
-over the union of child solutions (optionally + augment images).
+Historically this module held three hand-written objective classes
+(Coverage / KMedoid / FacilityLocation), each wiring its own Pallas
+kernels and engine methods. The objective protocol (DESIGN §Objective
+protocol) replaced them with declarative `KernelRule` specs consumed by
+one generic `RuleObjective`; this module re-exports the public entry
+points so existing imports (`from repro.core.functions import
+make_objective`) keep working.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Tuple
+from repro.core.objective import (DEFAULT_SAT_CAP, RuleObjective,
+                                  RuleState, make_objective, register,
+                                  registry)
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import ops
-
-F32 = jnp.float32
-INF = jnp.inf
-
-
-def _megakernel_rows(ground, cands, row, cand_valid, k, pw_mode, mode,
-                     backend):
-    """Shared megakernel tier dispatch for the vector objectives: run the
-    whole k-step loop over `row` (mind/curmax) and return (new_row, bests,
-    gains), or None when neither megakernel tier fits (DESIGN §Perf)."""
-    plan = ops.fused_plan(ground.shape[0], cands.shape[0],
-                          d=ground.shape[1], backend=backend)
-    if plan is None or plan["tier"] not in ("resident", "streaming"):
-        return None
-    if plan["tier"] == "resident":
-        return ops.greedy_loop_resident(ground, cands, row, cand_valid, k,
-                                        pw_mode=pw_mode, mode=mode,
-                                        backend=backend)
-    mat = ops.pairwise_matrix(ground, cands, mode=pw_mode, backend=backend,
-                              dtype=plan["dtype"])
-    return ops.greedy_loop(mat, row, cand_valid, k, mode=mode,
-                           backend=backend, plan=plan)
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class CoverageState:
-    covered: jax.Array          # (W,) uint32 packed bitmap
-    total: jax.Array            # () f32 current covered count
-
-    def tree_flatten(self):
-        return (self.covered, self.total), None
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
-
-
-class Coverage:
-    """max-k-cover / k-dominating-set: f(S) = |∪_{e∈S} cover(e)|."""
-
-    name = "coverage"
-
-    def __init__(self, universe_words: int, backend: str = None):
-        self.words = universe_words
-        self.backend = backend
-
-    def init_state(self, ground, ground_valid) -> CoverageState:
-        del ground, ground_valid
-        return CoverageState(jnp.zeros((self.words,), jnp.uint32),
-                             jnp.zeros((), F32))
-
-    def gains(self, state: CoverageState, cands, cand_valid):
-        return ops.coverage_gains(cands, state.covered, cand_valid,
-                                  backend=self.backend)
-
-    def update(self, state: CoverageState, payload) -> CoverageState:
-        new = jnp.bitwise_or(state.covered, payload)
-        added = jnp.sum(jax.lax.population_count(
-            jnp.bitwise_and(payload, jnp.bitwise_not(state.covered))
-        ).astype(jnp.int32)).astype(F32)
-        return CoverageState(new, state.total + added)
-
-    def value(self, state: CoverageState):
-        return state.total
-
-    def prepare(self, state, cands, cand_valid):
-        # Coverage gains depend non-linearly on the covered bitmap — there
-        # is no cacheable ground×candidate matrix; keep the per-step path.
-        return None
-
-    def replay_batch(self, state: CoverageState, payloads, valid
-                     ) -> CoverageState:
-        masked = jnp.where(valid[:, None], payloads,
-                           jnp.zeros_like(payloads))
-        union = jax.lax.reduce(masked, jnp.uint32(0),
-                               jax.lax.bitwise_or, [0])
-        return self.update(state, union)   # one OR'd bitmap = one element
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class MedoidState:
-    ground: jax.Array           # (N, D) evaluation set
-    mind: jax.Array             # (N,) min distance to solution (d(·,e0) at ∅)
-    base: jax.Array             # () f32 L({e0}) term
-    n_eff: jax.Array            # () f32 number of valid ground elements
-
-    def tree_flatten(self):
-        return (self.ground, self.mind, self.base, self.n_eff), None
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
-
-
-class KMedoid:
-    """Exemplar clustering: f(S) = L({e0}) − L(S ∪ {e0}), L = mean min dist.
-
-    e0 is the all-zeros auxiliary element (paper §6.4), so d(u, e0) = ‖u‖
-    and the empty-solution mind is exactly ‖u‖.
-    """
-
-    name = "kmedoid"
-
-    def __init__(self, backend: str = None):
-        self.backend = backend
-
-    def init_state(self, ground, ground_valid) -> MedoidState:
-        d0 = jnp.linalg.norm(ground.astype(F32), axis=-1)
-        # invalid ground rows: mind = 0 ⇒ contribute nothing to any gain
-        mind = jnp.where(ground_valid, d0, 0.0)
-        n_eff = jnp.maximum(jnp.sum(ground_valid.astype(F32)), 1.0)
-        base = jnp.sum(mind) / n_eff
-        return MedoidState(ground, mind, base, n_eff)
-
-    def gains(self, state: MedoidState, cands, cand_valid):
-        g = ops.kmedoid_gains(state.ground, state.mind, cands, cand_valid,
-                              backend=self.backend)
-        # kernels divide by ground rows; rescale to valid count
-        return jnp.where(jnp.isfinite(g),
-                         g * (state.ground.shape[0] / state.n_eff), g)
-
-    def update(self, state: MedoidState, payload) -> MedoidState:
-        from repro.kernels import ref
-        mind = ref.kmedoid_update(state.ground, state.mind, payload)
-        return dataclasses.replace(state, mind=mind)
-
-    def value(self, state: MedoidState):
-        return state.base - jnp.sum(state.mind) / state.n_eff
-
-    def prepare(self, state: MedoidState, cands, cand_valid):
-        plan = ops.fused_plan(state.ground.shape[0], cands.shape[0],
-                              backend=self.backend)
-        if plan is None or (plan["block_n"] == 0
-                            and ops._backend(self.backend) != "ref"):
-            return None                       # memory-capped: per-step path
-        mat = ops.pairwise_matrix(state.ground, cands, mode="dist",
-                                  backend=self.backend, dtype=plan["dtype"])
-        return mat, plan
-
-    def fused_step(self, state: MedoidState, cache, cand_mask, prev):
-        mat, plan = cache
-        mind, best, gain = ops.fused_step(mat, state.mind, cand_mask,
-                                          prev, mode="min",
-                                          backend=self.backend, plan=plan)
-        return (dataclasses.replace(state, mind=mind), best,
-                gain / state.n_eff)
-
-    def flush_pending(self, state: MedoidState, cache, prev) -> MedoidState:
-        mind = ops.apply_column(cache[0], state.mind, prev, mode="min")
-        return dataclasses.replace(state, mind=mind)
-
-    def megakernel_loop(self, state: MedoidState, cands, cand_valid,
-                        k: int):
-        rows = _megakernel_rows(state.ground, cands, state.mind,
-                                cand_valid, k, "dist", "min", self.backend)
-        if rows is None:
-            return None
-        mind, bests, gains = rows
-        return (dataclasses.replace(state, mind=mind), bests,
-                gains / state.n_eff)
-
-    def replay_batch(self, state: MedoidState, payloads, valid
-                     ) -> MedoidState:
-        mat = ops.pairwise_matrix(state.ground, payloads, mode="dist",
-                                  backend=self.backend)
-        mind = ops.masked_col_reduce(mat, valid, state.mind, mode="min")
-        return dataclasses.replace(state, mind=mind)
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class FacilityState:
-    ground: jax.Array           # (N, D)
-    curmax: jax.Array           # (N,) max similarity to solution (0 at ∅)
-    n_eff: jax.Array
-
-    def tree_flatten(self):
-        return (self.ground, self.curmax, self.n_eff), None
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
-
-
-class FacilityLocation:
-    """f(S) = mean_u max(0, max_{v∈S} ⟨u, v⟩) — embedding coreset selection."""
-
-    name = "facility"
-
-    def __init__(self, backend: str = None):
-        self.backend = backend
-
-    def init_state(self, ground, ground_valid) -> FacilityState:
-        big = jnp.float32(3.0e38)
-        curmax = jnp.where(ground_valid, 0.0, big)   # invalid rows: no gain
-        n_eff = jnp.maximum(jnp.sum(ground_valid.astype(F32)), 1.0)
-        return FacilityState(ground, curmax, n_eff)
-
-    def gains(self, state: FacilityState, cands, cand_valid):
-        g = ops.facility_gains(state.ground, state.curmax, cands, cand_valid,
-                               backend=self.backend)
-        return jnp.where(jnp.isfinite(g),
-                         g * (state.ground.shape[0] / state.n_eff), g)
-
-    def update(self, state: FacilityState, payload) -> FacilityState:
-        from repro.kernels import ref
-        curmax = ref.facility_update(state.ground, state.curmax, payload)
-        return dataclasses.replace(state, curmax=curmax)
-
-    def value(self, state: FacilityState):
-        valid = state.curmax < 1.0e38
-        return jnp.sum(jnp.where(valid, state.curmax, 0.0)) / state.n_eff
-
-    def prepare(self, state: FacilityState, cands, cand_valid):
-        plan = ops.fused_plan(state.ground.shape[0], cands.shape[0],
-                              backend=self.backend)
-        if plan is None or (plan["block_n"] == 0
-                            and ops._backend(self.backend) != "ref"):
-            return None                       # memory-capped: per-step path
-        mat = ops.pairwise_matrix(state.ground, cands, mode="dot",
-                                  backend=self.backend, dtype=plan["dtype"])
-        return mat, plan
-
-    def fused_step(self, state: FacilityState, cache, cand_mask, prev):
-        mat, plan = cache
-        curmax, best, gain = ops.fused_step(mat, state.curmax, cand_mask,
-                                            prev, mode="max",
-                                            backend=self.backend, plan=plan)
-        return (dataclasses.replace(state, curmax=curmax), best,
-                gain / state.n_eff)
-
-    def flush_pending(self, state: FacilityState, cache, prev
-                      ) -> FacilityState:
-        curmax = ops.apply_column(cache[0], state.curmax, prev, mode="max")
-        return dataclasses.replace(state, curmax=curmax)
-
-    def megakernel_loop(self, state: FacilityState, cands, cand_valid,
-                        k: int):
-        rows = _megakernel_rows(state.ground, cands, state.curmax,
-                                cand_valid, k, "dot", "max", self.backend)
-        if rows is None:
-            return None
-        curmax, bests, gains = rows
-        return (dataclasses.replace(state, curmax=curmax), bests,
-                gains / state.n_eff)
-
-    def replay_batch(self, state: FacilityState, payloads, valid
-                     ) -> FacilityState:
-        mat = ops.pairwise_matrix(state.ground, payloads, mode="dot",
-                                  backend=self.backend)
-        curmax = ops.masked_col_reduce(mat, valid, state.curmax, mode="max")
-        return dataclasses.replace(state, curmax=curmax)
-
-
-def make_objective(name: str, *, universe: int = 0, backend: str = None):
-    if name in ("kcover", "kdom", "coverage"):
-        assert universe > 0, "coverage objectives need a universe size"
-        return Coverage((universe + 31) // 32, backend=backend)
-    if name == "kmedoid":
-        return KMedoid(backend=backend)
-    if name in ("facility", "facility_location"):
-        return FacilityLocation(backend=backend)
-    raise KeyError(name)
+__all__ = ["DEFAULT_SAT_CAP", "RuleObjective", "RuleState",
+           "make_objective", "register", "registry"]

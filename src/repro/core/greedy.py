@@ -10,15 +10,23 @@ call-count accounting. See DESIGN §4.
 
 Three inner-loop engines (DESIGN §Perf): the per-step path above; the
 FUSED cached-matrix engine — `objective.prepare()` computes the N×C
-distance/similarity matrix once, then each scan step is a single fused
-kernel (deferred winner-column update + masked gains + on-chip argmax)
-over the cache: O(N·C·D) + k·O(N·C) total instead of k·O(N·C·D), kernel
-calls per greedy 3k → k+1; and the MEGAKERNEL engine — the ENTIRE k-step
-loop is one Pallas dispatch (`objective.megakernel_loop` →
+interaction matrix once, then each scan step is a single fused kernel
+(deferred winner-column fold + masked gains + on-chip argmax) over the
+cache: O(N·C·D) + k·O(N·C) total instead of k·O(N·C·D), kernel calls per
+greedy 3k → k+1; and the MEGAKERNEL engine — the ENTIRE k-step loop is
+one Pallas dispatch (`objective.megakernel_loop` →
 kernels/greedy_loop.py), 2 dispatches per greedy on the streaming tier
-and 1 on the VMEM-resident tier (the accumulation-node fast path).
-`engine='auto'` picks the fastest applicable engine via the
-ops.fused_plan tier gate; all engines make identical selections.
+and 1 on the VMEM-resident tier (the accumulation-node fast path; also 1
+for bitmap objectives, whose prepare is a transpose rather than a
+kernel).
+
+Engine selection is delegated ONCE per invocation to
+`plans.select_engine` (DESIGN §Objective protocol): the objective's
+KernelRule plus the (n, c, d) shapes and the sampling/constraint flags
+resolve to an EnginePlan that the whole loop consumes — no
+`hasattr` duck-typing, no per-objective special cases, and every
+registered objective (coverage included) rides every tier its budget
+admits. All engines make identical selections.
 
 Solutions are fixed-shape: (k,) ids + (k, …) payloads + (k,) validity mask
 (“maximum marginal gain is zero → break” becomes masking).
@@ -32,6 +40,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import plans
 from repro.runtime import flags
 
 F32 = jnp.float32
@@ -82,22 +91,21 @@ def greedy(objective, ids: jax.Array, payloads: jax.Array, valid: jax.Array,
     e.g. PartitionMatroid; infeasible candidates are masked each step
     (paper §7 future work; Greedy is 1/2-approximate under matroids).
 
-    ``engine`` selects the inner loop (DESIGN §Perf):
-      * 'auto'  — megakernel when the objective supports it, the tier gate
-                  (ops.fused_plan) admits it, sampling is off, and no
-                  constraint is active; else the cached-matrix fused
-                  engine when prepare() fits the budget and sampling is
-                  off; per-step otherwise.
+    ``engine`` selects the inner loop, resolved by `plans.select_engine`
+    (DESIGN §Perf / §Objective protocol):
+      * 'auto'  — megakernel when the tier gate admits it, sampling is
+                  off, and no constraint is active; else the cached-matrix
+                  fused engine when the cache fits the budget and sampling
+                  is off; per-step otherwise.
       * 'mega'  — force the whole-greedy megakernel (one dispatch runs
-                  all k steps; 2 dispatches/greedy streaming, 1 resident).
-                  Falls back to the fused engine under constraints or
-                  sampling (the loop kernel evaluates neither feasibility
-                  masks nor per-step subsets), and further to per-step
-                  when the objective has no cacheable structure.
+                  all k steps; 2 dispatches/greedy streaming, 1 resident
+                  or bitmap). Falls back to the fused engine under
+                  constraints or sampling (the loop kernel evaluates
+                  neither feasibility masks nor per-step subsets), and
+                  further to per-step when the cache busts the budget.
       * 'fused' — force the cached per-step engine (even under sampling;
-                  still silently falls back when the objective has no
-                  cacheable structure, e.g. coverage, or the cache
-                  exceeds budget).
+                  still silently falls back to per-step when the cache
+                  exceeds the budget).
       * 'step'  — force the legacy recompute-per-step path.
     All engines make identical selections; the fused engine's total gains
     cost is O(N·C·D) + k·O(N·C) instead of k·O(N·C·D), and the megakernel
@@ -108,9 +116,6 @@ def greedy(objective, ids: jax.Array, payloads: jax.Array, valid: jax.Array,
     keeps the lowest candidate index — same payload, possibly different
     id.
     """
-    if engine not in ("auto", "mega", "fused", "step"):
-        raise ValueError(f"unknown engine {engine!r}; "
-                         "expected 'auto', 'mega', 'fused', or 'step'")
     n = ids.shape[0]
     if ground is None:
         ground, ground_valid = payloads, valid
@@ -120,27 +125,23 @@ def greedy(objective, ids: jax.Array, payloads: jax.Array, valid: jax.Array,
         key = key if key is not None else jax.random.PRNGKey(0)
         cand_idx = _sample_candidates(key, k, n, sample)
 
-    # Megakernel engine: the whole k-step selection in 1–2 dispatches.
-    # Constraints need a per-step feasibility mask and sampling a per-step
-    # candidate subset — neither exists inside the loop kernel, so those
-    # branches drop to the fused per-step engine below (identical
-    # selections either way).
-    if (engine in ("auto", "mega") and not use_sampling
-            and constraint is None
-            and hasattr(objective, "megakernel_loop")):
-        mega = objective.megakernel_loop(state, payloads, valid, k)
+    # ONE planning decision for the whole invocation: rule + shapes +
+    # budgets + the sampling/constraint flags (which demote the megakernel
+    # to the fused scan — identical selections either way).
+    plan = plans.select_engine(
+        objective.rule, *objective.plan_dims(state, payloads),
+        requested=engine, sampling=use_sampling,
+        constrained=constraint is not None, backend=objective.backend)
+
+    if plan.engine in ("mega_stream", "mega_resident"):
+        mega = objective.megakernel_loop(state, payloads, valid, k,
+                                         plan=plan)
         if mega is not None:
             return _finalize_mega(objective, mega, ids, payloads, valid, k)
 
     cache = None
-    # Under stochastic sampling 'auto' keeps the step path: each step only
-    # evaluates `sample` candidates there (k·s·N·D total), while the fused
-    # engine would pay the full O(N·C·D) prepare plus k whole-(N, C)
-    # reductions — negating the n/sample savings. engine='fused' forces it.
-    fused_ok = engine in ("fused", "mega") or (engine == "auto"
-                                               and not use_sampling)
-    if fused_ok and hasattr(objective, "prepare"):
-        cache = objective.prepare(state, payloads, valid)
+    if plan.engine == "fused":
+        cache = objective.prepare(state, payloads, valid, plan=plan)
     if cache is not None:
         return _greedy_fused(objective, state, cache, ids, payloads, valid,
                              k, constraint,

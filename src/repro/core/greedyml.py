@@ -75,12 +75,30 @@ def _broadcast_from_root(sol: Solution, tree_axes: Sequence[str],
                     pick(sol.value), pick(sol.evals))
 
 
+def _level_key(seed: Optional[int], lvl: int) -> jax.Array:
+    """Base PRNG key for accumulation level `lvl`: the legacy fixed tape
+    when unseeded (bit-compatible with older runs), an independent stream
+    per user seed otherwise. `seed` is a static int, so the key is built
+    inside the traced SPMD function — no shard_map capture."""
+    if seed is None:
+        return jax.random.PRNGKey(23 + lvl)
+    return jax.random.fold_in(jax.random.PRNGKey(seed), 1 + lvl)
+
+
+def _leaf_key(seed: Optional[int]) -> jax.Array:
+    """Base PRNG key for the leaf Greedy draws (see _level_key)."""
+    if seed is None:
+        return jax.random.PRNGKey(17)
+    return jax.random.fold_in(jax.random.PRNGKey(seed), 0)
+
+
 def accumulate_levels(objective, s_prev: Solution, k: int,
                       tree_axes: Sequence[str], radices: Sequence[int],
                       aug_levels: Optional[jax.Array] = None,
                       sample_level: int = 0,
                       node_engine: str = "auto",
-                      carry_prev: Optional[Solution] = None) -> Solution:
+                      carry_prev: Optional[Solution] = None,
+                      seed: Optional[int] = None) -> Solution:
     """The accumulation rounds of Algorithm 3.1 as a standalone SPMD
     function: starting from ANY per-lane solution `s_prev` (a leaf Greedy
     for greedyml proper, a sieve summary for the streaming continuous
@@ -95,6 +113,9 @@ def accumulate_levels(objective, s_prev: Solution, k: int,
     ``carry_prev``: optional extra competitor (e.g. the last merged
     solution of a continuous stream) replayed on the ROOT node's ground
     and select_better'd against the result.
+    ``seed``: static int reseeding every stochastic-greedy draw; None
+    keeps the legacy fixed tape (PRNGKey(23 + lvl)), so unseeded runs
+    stay bit-compatible while independent runs can finally diverge.
     """
     ground, ground_valid = s_prev.payloads, s_prev.valid
     for lvl, ax in enumerate(tree_axes):
@@ -109,7 +130,7 @@ def accumulate_levels(objective, s_prev: Solution, k: int,
         lvl_key = None
         if sample_level:
             lvl_key = jax.random.fold_in(
-                jax.random.PRNGKey(23 + lvl),
+                _level_key(seed, lvl),
                 _machine_flat_id(tree_axes, radices))
         s_new = greedy(objective, u_ids, u_pay, u_val, k,
                        ground=ground, ground_valid=ground_valid,
@@ -135,17 +156,20 @@ def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
                       augment: Optional[jax.Array] = None,
                       sample_leaf: int = 0, sample_level: int = 0,
                       engine: str = "auto",
-                      node_engine: Optional[str] = None):
+                      node_engine: Optional[str] = None,
+                      seed: Optional[int] = None):
     """Returns the per-lane SPMD function (for use inside shard_map).
 
     ``sample_leaf`` / ``sample_level``: stochastic-greedy sampling at the
     leaves / accumulation nodes (Mirzasoleiman et al. 2015).
     ``engine``: inner-loop selection engine for the leaf Greedy calls
-    ('auto' = fastest fitting tier per ops.fused_plan).
+    ('auto' = fastest fitting tier per plans.select_engine).
     ``node_engine``: engine for the accumulation-node Greedy calls;
     default None inherits ``engine`` — with 'auto' the (b·k + A)×(b·k)
     node shape lands on the VMEM-resident megakernel tier, one dispatch
-    per node."""
+    per node.
+    ``seed``: static int reseeding the stochastic draws (leaves AND
+    levels); None keeps the legacy fixed tape."""
     node_engine = node_engine or engine
 
     def fn(ids, payloads, valid, *aug):
@@ -153,7 +177,7 @@ def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
         leaf_key = None
         if sample_leaf:
             leaf_key = jax.random.fold_in(
-                jax.random.PRNGKey(17),
+                _leaf_key(seed),
                 _machine_flat_id(tree_axes, radices))
         s_prev = greedy(objective, ids, payloads, valid, k,
                         sample=sample_leaf, key=leaf_key, engine=engine)
@@ -162,7 +186,7 @@ def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
         s_prev = accumulate_levels(objective, s_prev, k, tree_axes, radices,
                                    aug_levels=aug[0] if aug else None,
                                    sample_level=sample_level,
-                                   node_engine=node_engine)
+                                   node_engine=node_engine, seed=seed)
         return _broadcast_from_root(s_prev, tree_axes, radices)
 
     return fn
@@ -174,13 +198,16 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
                          augment: Optional[jax.Array] = None,
                          sample_leaf: int = 0, sample_level: int = 0,
                          engine: str = "auto",
-                         node_engine: Optional[str] = None) -> Solution:
+                         node_engine: Optional[str] = None,
+                         seed: Optional[int] = None) -> Solution:
     """Run distributed GreedyML over `mesh`.
 
     ids/payloads/valid: leading dim n sharded over `tree_axes` (outermost
     mesh axis first in the PartitionSpec so lane i gets block i). `augment`:
     optional (L, A, …) per-level extra evaluation elements (k-medoid §6.4),
-    replicated.
+    replicated. ``seed``: static int reseeding the stochastic-greedy
+    draws; None keeps the legacy fixed tape, so unseeded runs reproduce
+    older results bit-for-bit.
     """
     radices = [mesh.shape[a] for a in tree_axes]
     data_spec = P(tuple(reversed(tree_axes)))
@@ -192,7 +219,7 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
     fn = greedyml_shmap_fn(objective, k, tree_axes, radices,
                            sample_leaf=sample_leaf,
                            sample_level=sample_level, engine=engine,
-                           node_engine=node_engine)
+                           node_engine=node_engine, seed=seed)
     out = shard_map(fn, mesh=mesh,
                     in_specs=tuple(in_specs),
                     out_specs=Solution(P(), P(), P(), P(), P()),
@@ -203,16 +230,26 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
 def randgreedi_distributed(objective, ids, payloads, valid, k, mesh,
                            machine_axes: Sequence[str],
                            augment=None, engine: str = "auto",
-                           node_engine: Optional[str] = None) -> Solution:
+                           node_engine: Optional[str] = None,
+                           sample_leaf: int = 0,
+                           seed: Optional[int] = None) -> Solution:
     """RandGreedi = GreedyML with a single accumulation level: all machine
     axes form ONE level (gather everything to every lane, one global
-    Greedy). Implemented by flattening the axes tuple into one level."""
+    Greedy). Implemented by flattening the axes tuple into one level.
+    ``sample_leaf``/``seed`` enable reseedable stochastic greedy at the
+    leaves (as in greedyml_distributed)."""
     radices = [math.prod(mesh.shape[a] for a in machine_axes)]
     node_eng = node_engine or engine
 
     def fn(ids_, payloads_, valid_, *aug):
+        leaf_key = None
+        if sample_leaf:
+            leaf_key = jax.random.fold_in(
+                _leaf_key(seed),
+                _machine_flat_id(machine_axes,
+                                 [mesh.shape[a] for a in machine_axes]))
         s_leaf = greedy(objective, ids_, payloads_, valid_, k,
-                        engine=engine)
+                        sample=sample_leaf, key=leaf_key, engine=engine)
         u_ids, u_pay, u_val = s_leaf.ids, s_leaf.payloads, s_leaf.valid
         for ax in machine_axes:
             u_ids = lax.all_gather(u_ids, ax, axis=0, tiled=True)

@@ -1,24 +1,26 @@
 """Pallas TPU kernel: one fused greedy selection step over a cached matrix.
 
 Second half of the fused selection engine (DESIGN §Perf). Given the cached
-(N, C) distance/similarity matrix from `pairwise.py`, a greedy step is
+(N, C) matrix from `pairwise.py` (or the transposed bitmap stack for
+coverage — see kernels/rules.py), a greedy step is
 
-    1. apply the PREVIOUS winner's column to the per-ground-row state
-       (mind ← min(mind, M[:, prev]) for k-medoid,
-        curmax ← max(curmax, M[:, prev]) for facility) — the deferred
-       update, fused here so no separate O(N·D) update matmul exists;
-    2. per-tile partial gains  Σ_rows relu(±(state − M))  accumulated in a
+    1. apply the PREVIOUS winner's column to the per-ground-row state via
+       the rule's fold (min for k-medoid, max for facility, OR for
+       coverage, saturated-add for satcover) — the deferred update, fused
+       here so no separate O(N·D) update pass exists;
+    2. per-tile partial gains  Σ_rows part(state, M)  accumulated in a
        VMEM scratch row — the (1, C) gains never round-trip through HBM;
     3. masked argmax over the accumulated gains ON-CHIP at the last grid
        step, emitting only (best_idx, best_gain) scalars.
 
 Grid: (N/BN,) — each program holds a (BN, C) row-block of the cached matrix
-in VMEM. BN is chosen by the ops.py wrapper so BN·C·4 fits the VMEM budget;
-when even BN=8 does not fit, the wrapper signals the caller to fall back to
-the per-step engine (the paper's memory-capped regime).
+in VMEM. BN comes from the EnginePlan (kernels/plans.py); when even BN=8
+does not fit, the planner routes the caller to the per-step engine (the
+paper's memory-capped regime).
 
-Modes: 'min' (k-medoid: state row is mind, gain = relu(mind − M)) and
-'max' (facility: state row is curmax, gain = relu(M − curmax)).
+All objective math — fold, gain part, argmax tie-break — comes from the
+shared rule primitives, so this kernel serves every registered objective
+with zero per-objective code.
 """
 from __future__ import annotations
 
@@ -29,53 +31,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import rules as R
+from repro.kernels.rules import (KernelRule, fold_winner,  # noqa: F401
+                                 masked_argmax, partial_gains)
 from repro.kernels.tpu_compat import compiler_params
 
 F32 = jnp.float32
 
-_NEG_INF = float("-inf")
-
-
-# Shared step primitives — also the building blocks of the whole-greedy
-# megakernel (kernels/greedy_loop.py), which must be bit-identical to this
-# per-step kernel so the engines select the same elements.
-
-
-def fold_winner(row, col, prev, mode: str):
-    """Deferred update: fold the previous winner's column into the state
-    row; prev < 0 (no accepted winner yet) is a no-op."""
-    upd = jnp.minimum(row, col) if mode == "min" else jnp.maximum(row, col)
-    return jnp.where(prev >= 0, upd, row)
-
-
-def partial_gains(row, m, mode: str):
-    """(1, BN) state row × (BN, C) matrix block → (1, C) relu-sum partials."""
-    part = (jnp.maximum(row.T - m, 0.0) if mode == "min"
-            else jnp.maximum(m - row.T, 0.0))          # (BN, C)
-    return jnp.sum(part, axis=0, keepdims=True)
-
-
-def masked_argmax(gains, mask):
-    """(1, C) gains + 0/1 mask → (first argmax () i32, max gain () f32)."""
-    g = jnp.where(mask > 0, gains, _NEG_INF)
-    mx = jnp.max(g)
-    cols = jax.lax.broadcasted_iota(jnp.int32, g.shape, 1)
-    first = jnp.min(jnp.where(g == mx, cols, jnp.int32(2 ** 30)))
-    return first, mx
-
 
 def _kernel(prev_ref, mat_ref, row_ref, mask_ref,
-            newrow_ref, best_ref, gain_ref, acc_ref, *, mode: str):
+            newrow_ref, best_ref, gain_ref, acc_ref, *, rule: KernelRule):
     ni = pl.program_id(0)
     prev = prev_ref[0, 0]
 
-    m = mat_ref[...].astype(F32)                       # (BN, C)
-    r = row_ref[...].astype(F32)                       # (1, BN)
+    m = mat_ref[...]                                   # (BN, C)
+    r = row_ref[...]                                   # (1, BN)
 
     # 1. deferred update: fold the previous winner's column into the state
     col = jax.lax.dynamic_slice(m, (0, jnp.maximum(prev, 0)),
                                 (m.shape[0], 1)).T     # (1, BN)
-    new_r = fold_winner(r, col, prev, mode)
+    new_r = R.fold_winner(r, col, prev, rule)
     newrow_ref[...] = new_r
 
     # 2. partial gains for this row block, accumulated on-chip
@@ -83,32 +58,32 @@ def _kernel(prev_ref, mat_ref, row_ref, mask_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += partial_gains(new_r, m, mode)
+    acc_ref[...] += R.partial_gains(new_r, m, rule)
 
     # 3. masked argmax at the final grid step — scalars out, no (1, C) row
     @pl.when(ni == pl.num_programs(0) - 1)
     def _argmax():
-        first, mx = masked_argmax(acc_ref[...], mask_ref[...])
+        first, mx = R.masked_argmax(acc_ref[...], mask_ref[...])
         best_ref[0, 0] = first
         gain_ref[0, 0] = mx
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("rule", "block_n", "interpret"))
 def fused_step_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
-                      prev: jax.Array, mode: str = "min",
+                      prev: jax.Array, rule: KernelRule,
                       block_n: int = 256, interpret: bool = False):
-    """mat: (N, C) cached matrix, row: (N,) state, mask: (C,) 0/1 f32,
-    prev: () int32 previous winner (-1 = none).
+    """mat: (N, C) cached matrix, row: (N,) state in the rule's row dtype,
+    mask: (C,) 0/1 f32, prev: () int32 previous winner (-1 = none).
 
     Returns (new_row (N,), best () int32, best_gain () f32). best_gain is
-    the raw masked relu-sum — callers normalize by the valid ground count.
+    the raw masked part-sum — callers normalize by the valid ground count.
     N, C padded to (block_n, 128) multiples by the ops.py wrapper.
     """
     n, c = mat.shape
     assert n % block_n == 0 and c % 128 == 0, (n, c, block_n)
     grid = (n // block_n,)
     new_row, best, gain = pl.pallas_call(
-        functools.partial(_kernel, mode=mode),
+        functools.partial(_kernel, rule=rule),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda ni: (0, 0)),
@@ -122,7 +97,7 @@ def fused_step_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
             pl.BlockSpec((1, 1), lambda ni: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((1, n), F32),
+            jax.ShapeDtypeStruct((1, n), rule.dtype),
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
             jax.ShapeDtypeStruct((1, 1), F32),
         ],
@@ -131,5 +106,6 @@ def fused_step_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
         # argmax, so it is order-dependent
         compiler_params=compiler_params("arbitrary"),
         interpret=interpret,
-    )(prev.reshape(1, 1).astype(jnp.int32), mat, row.reshape(1, n), mask.reshape(1, c))
+    )(prev.reshape(1, 1).astype(jnp.int32), mat, row.reshape(1, n),
+      mask.reshape(1, c))
     return new_row[0], best[0, 0], gain[0, 0]

@@ -10,30 +10,30 @@ iterations, so the whole selection is one `pallas_call`. Two tiers:
 
   * **streaming** — grid `(k + 1, N/BN)`: each step re-reads the cached
     (N, C) matrix from HBM block by block (the only HBM traffic), while the
-    state row persists in a (N/BN, BN) VMEM scratch, the evolving candidate
-    mask and gains accumulator in (1, C) VMEM scratch, and the previous
-    winner in SMEM. Step s folds the winner of step s−1 into the row
-    (deferred update), accumulates masked relu gains per block, argmaxes
-    on-chip at the last block, and records `(best, gain)`; grid step k only
-    flushes the final winner fold and writes the row out. 2 dispatches per
-    greedy: pairwise prepare + this loop.
+    state row persists in a (N/BN, BN) VMEM scratch (in the rule's row
+    dtype), the evolving candidate mask and gains accumulator in (1, C)
+    VMEM scratch, and the previous winner in SMEM. Step s folds the winner
+    of step s−1 into the row (deferred update), accumulates masked gains
+    per block, argmaxes on-chip at the last block, and records
+    `(best, gain)`; grid step k only flushes the final winner fold and
+    writes the row out. 2 dispatches per greedy: pairwise prepare + this
+    loop — and ONE for bitmap rules, whose prepare is a transpose rather
+    than a kernel.
 
   * **resident** — a single program (no grid) for matrices that fit VMEM
-    whole: the kernel takes the (N, D)/(C, D) FEATURE blocks, builds the
-    distance/similarity matrix on-chip (one MXU matmul), and runs the k-step
-    loop as a `fori_loop` over the VMEM-resident matrix. This is exactly the
-    accumulation-node shape of the GreedyML tree — (b·k + A)×(b·k) — making
-    every internal node a SINGLE dispatch, where launch overhead is the
-    runtime.
+    whole: the kernel takes the (N, D)/(C, D) FEATURE blocks (or the
+    (C, W) candidate bitmaps), builds the matrix on-chip via the rule's
+    pairwise op, and runs the k-step loop as a `fori_loop` over the
+    VMEM-resident matrix. This is exactly the accumulation-node shape of
+    the GreedyML tree — (b·k + A)×(b·k) — making every internal node a
+    SINGLE dispatch, where launch overhead is the runtime.
 
 Selection semantics are bit-identical to the fused/step engines (same
-fold → relu-sum → first-argmax primitives from fused_step.py, same
+fold → part-sum → first-argmax primitives from kernels/rules.py, same
 `gain > 0` accept rule): a rejected step leaves the state and mask
-untouched and emits best = −1, exactly like the host-side scan.
-
-Modes mirror fused_step: 'min' (k-medoid, state = mind) and 'max'
-(facility, state = curmax). Gains emitted are RAW masked relu sums —
-callers normalize by the valid ground count.
+untouched and emits best = −1, exactly like the host-side scan. Gains
+emitted are RAW masked part sums — callers normalize by the valid ground
+count.
 """
 from __future__ import annotations
 
@@ -44,8 +44,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.fused_step import fold_winner, masked_argmax, partial_gains
-from repro.kernels.pairwise import pairwise_block
+from repro.kernels import rules as R
+from repro.kernels.rules import KernelRule
 from repro.kernels.tpu_compat import compiler_params
 
 F32 = jnp.float32
@@ -53,7 +53,8 @@ F32 = jnp.float32
 
 def _stream_kernel(mat_ref, row_ref, mask_ref,
                    rowout_ref, best_ref, gain_ref,
-                   rows_ref, msk_ref, acc_ref, prev_ref, *, mode: str):
+                   rows_ref, msk_ref, acc_ref, prev_ref, *,
+                   rule: KernelRule):
     s = pl.program_id(0)                    # selection step (sequential)
     ni = pl.program_id(1)                   # row block within a step
     k = pl.num_programs(0) - 1              # last grid step only flushes
@@ -68,13 +69,13 @@ def _stream_kernel(mat_ref, row_ref, mask_ref,
     def _init_row_block():
         rows_ref[pl.ds(ni, 1), :] = row_ref[...]
 
-    m = mat_ref[...].astype(F32)                        # (BN, C)
+    m = mat_ref[...]                                    # (BN, C)
     prev = prev_ref[0]
 
     # deferred update: fold the previous step's winner into this row block
     col = jax.lax.dynamic_slice(m, (0, jnp.maximum(prev, 0)),
                                 (m.shape[0], 1)).T      # (1, BN)
-    r = fold_winner(rows_ref[pl.ds(ni, 1), :], col, prev, mode)
+    r = R.fold_winner(rows_ref[pl.ds(ni, 1), :], col, prev, rule)
     rows_ref[pl.ds(ni, 1), :] = r
 
     @pl.when(s < k)
@@ -83,11 +84,11 @@ def _stream_kernel(mat_ref, row_ref, mask_ref,
         def _zero():
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
-        acc_ref[...] += partial_gains(r, m, mode)
+        acc_ref[...] += R.partial_gains(r, m, rule)
 
         @pl.when(ni == nb - 1)
         def _argmax():
-            best, mx = masked_argmax(acc_ref[...], msk_ref[...])
+            best, mx = R.masked_argmax(acc_ref[...], msk_ref[...])
             accept = mx > 0.0
             best_i = jnp.where(accept, best, jnp.int32(-1))
             best_ref[0, 0] = best_i
@@ -103,21 +104,22 @@ def _stream_kernel(mat_ref, row_ref, mask_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "mode", "block_n", "interpret"))
+                   static_argnames=("k", "rule", "block_n", "interpret"))
 def greedy_loop_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
-                       k: int, mode: str = "min", block_n: int = 256,
+                       k: int, rule: KernelRule, block_n: int = 256,
                        interpret: bool = False):
-    """Streaming tier. mat: (N, C) cached matrix (f32 or bf16 storage, f32
-    accumulate); row: (1, N) state; mask: (1, C) 0/1 f32.
+    """Streaming tier. mat: (N, C) cached matrix (f32/bf16 storage for
+    feature rules — f32 accumulate — or uint32 word-major bitmaps); row:
+    (1, N) state in the rule's row dtype; mask: (1, C) 0/1 f32.
 
     Returns (final_row (N,), bests (k,) i32 with −1 = rejected step,
-    gains (k,) f32 raw relu sums). N, C padded by the ops.py wrapper.
+    gains (k,) f32 raw part sums). N, C padded by the ops.py wrapper.
     """
     n, c = mat.shape
     assert n % block_n == 0 and c % 128 == 0, (n, c, block_n)
     nb = n // block_n
     row_out, best, gain = pl.pallas_call(
-        functools.partial(_stream_kernel, mode=mode),
+        functools.partial(_stream_kernel, rule=rule),
         grid=(k + 1, nb),
         in_specs=[
             pl.BlockSpec((block_n, c), lambda s, ni: (ni, 0)),
@@ -130,15 +132,15 @@ def greedy_loop_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
             pl.BlockSpec((1, 1), lambda s, ni: (s, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((1, n), F32),
+            jax.ShapeDtypeStruct((1, n), rule.dtype),
             jax.ShapeDtypeStruct((k + 1, 1), jnp.int32),
             jax.ShapeDtypeStruct((k + 1, 1), F32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((nb, block_n), F32),    # state row, all blocks
-            pltpu.VMEM((1, c), F32),           # evolving candidate mask
-            pltpu.VMEM((1, c), F32),           # gains accumulator
-            pltpu.SMEM((1,), jnp.int32),       # previous winner
+            pltpu.VMEM((nb, block_n), rule.dtype),  # state row, all blocks
+            pltpu.VMEM((1, c), F32),                # evolving cand mask
+            pltpu.VMEM((1, c), F32),                # gains accumulator
+            pltpu.SMEM((1,), jnp.int32),            # previous winner
         ],
         # both dims are order-dependent: steps are sequential by definition,
         # and the row-block dim carries the accumulator + mask/prev updates
@@ -150,10 +152,8 @@ def greedy_loop_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
 
 def _resident_kernel(ground_ref, cands_ref, row_ref, mask_ref,
                      rowout_ref, best_ref, gain_ref, *,
-                     k: int, pw_mode: str, mode: str):
-    g = ground_ref[...].astype(F32)                     # (N, D)
-    cd = cands_ref[...].astype(F32)                     # (C, D)
-    m = pairwise_block(g, cd, pw_mode)                  # (N, C), on-chip
+                     k: int, rule: KernelRule):
+    m = R.matrix_block(ground_ref[...], cands_ref[...], rule)  # (N, C)
 
     cols = jax.lax.broadcasted_iota(jnp.int32, (1, m.shape[1]), 1)
     steps = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
@@ -162,8 +162,8 @@ def _resident_kernel(ground_ref, cands_ref, row_ref, mask_ref,
         row, mask, prev, bests, gains = carry
         col = jax.lax.dynamic_slice(m, (0, jnp.maximum(prev, 0)),
                                     (m.shape[0], 1)).T  # (1, N)
-        row = fold_winner(row, col, prev, mode)
-        best, mx = masked_argmax(partial_gains(row, m, mode), mask)
+        row = R.fold_winner(row, col, prev, rule)
+        best, mx = R.masked_argmax(R.partial_gains(row, m, rule), mask)
         accept = mx > 0.0
         best_i = jnp.where(accept, best, jnp.int32(-1))
         mask = jnp.where(accept & (cols == best), 0.0, mask)
@@ -171,37 +171,41 @@ def _resident_kernel(ground_ref, cands_ref, row_ref, mask_ref,
         return (row, mask, best_i,
                 jnp.where(sel, best_i, bests), jnp.where(sel, mx, gains))
 
-    carry = (row_ref[...].astype(F32), mask_ref[...].astype(F32),
+    carry = (row_ref[...], mask_ref[...].astype(F32),
              jnp.int32(-1),
              jnp.full((1, k), -1, jnp.int32), jnp.zeros((1, k), F32))
     row, _, prev, bests, gains = jax.lax.fori_loop(0, k, body, carry)
     # flush: fold the final accepted winner so value(state) sees all of S
     col = jax.lax.dynamic_slice(m, (0, jnp.maximum(prev, 0)),
                                 (m.shape[0], 1)).T
-    rowout_ref[...] = fold_winner(row, col, prev, mode)
+    rowout_ref[...] = R.fold_winner(row, col, prev, rule)
     best_ref[...] = bests
     gain_ref[...] = gains
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "pw_mode", "mode", "interpret"))
+                   static_argnames=("k", "rule", "interpret"))
 def greedy_loop_resident_pallas(ground: jax.Array, cands: jax.Array,
                                 row: jax.Array, mask: jax.Array, k: int,
-                                pw_mode: str = "dist", mode: str = "min",
-                                interpret: bool = False):
+                                rule: KernelRule, interpret: bool = False):
     """Resident tier: ONE dispatch builds the matrix on-chip and runs all k
-    steps. ground: (N, D), cands: (C, D), row: (1, N), mask: (1, C); the
-    whole working set — features, (N, C) matrix, relu partials — must fit
-    VMEM (gated by ops.fused_plan's resident check). pw_mode: 'dist'
-    (k-medoid) | 'dot' (facility). Returns as greedy_loop_pallas.
+    steps. Feature rules: ground (N, D), cands (C, D); bitmap rules:
+    ground is an ignored placeholder and cands the (C, W) bitmaps (the
+    on-chip matrix is their transpose, N = W). row: (1, N) in the rule's
+    row dtype, mask: (1, C); the whole working set must fit VMEM (gated
+    by plans.fused_plan's resident check). Returns as greedy_loop_pallas.
     """
-    n, d = ground.shape
+    n = row.shape[1]
     c = cands.shape[0]
-    assert cands.shape[1] == d and row.shape == (1, n) and mask.shape == (1, c)
+    assert mask.shape == (1, c), (row.shape, mask.shape)
+    if rule.is_bitmap:
+        assert cands.shape[1] == n, (cands.shape, n)
+    else:
+        assert ground.shape == (n, cands.shape[1])
     row_out, best, gain = pl.pallas_call(
-        functools.partial(_resident_kernel, k=k, pw_mode=pw_mode, mode=mode),
+        functools.partial(_resident_kernel, k=k, rule=rule),
         out_shape=[
-            jax.ShapeDtypeStruct((1, n), F32),
+            jax.ShapeDtypeStruct((1, n), rule.dtype),
             jax.ShapeDtypeStruct((1, k), jnp.int32),
             jax.ShapeDtypeStruct((1, k), F32),
         ],

@@ -1,77 +1,72 @@
-"""jit'd wrappers around the Pallas kernels.
+"""jit'd wrappers around the Pallas kernels, rule-dispatched.
 
-Dispatch policy (``backend`` arg or REPRO_KERNEL_BACKEND env):
+Dispatch policy (``backend`` arg or REPRO_KERNEL_BACKEND env, resolved by
+plans.resolve_backend):
   * 'auto'      — compiled Pallas on TPU, jnp reference elsewhere (CPU has no
                   Mosaic backend; interpret mode is for correctness tests)
   * 'pallas'    — compiled Pallas (TPU)
   * 'interpret' — Pallas interpret mode (CPU correctness validation)
   * 'ref'       — pure-jnp oracle
 
-Wrappers own all padding to tile multiples and validity masking so callers
-(core/functions.py) see the clean mathematical signature. Pad targets on
-the DRIFTING axes (ground rows N, candidates C — they grow level by level
-at accumulation nodes) are BUCKETED to the next power-of-two multiple of
-the tile so repeated calls hit the jit/pallas compile cache instead of
-retracing per shape (DESIGN §Perf); fixed axes (features D, universe words
-W) keep the plain next-multiple pad, and constant factors like 1/N are
-applied OUTSIDE the kernels so they never become static compile keys.
+Every wrapper takes the objective's `KernelRule` (kernels/rules.py) —
+there are no per-objective entry points and no mode strings. Wrappers own
+all padding to tile multiples and validity masking so callers
+(core/objective.py) see the clean mathematical signature. Pad targets on
+the DRIFTING axes (ground rows N — universe words W for bitmap rules —
+and candidates C; they grow level by level at accumulation nodes) are
+BUCKETED to the next power-of-two multiple of the tile so repeated calls
+hit the jit/pallas compile cache instead of retracing per shape (DESIGN
+§Perf); fixed axes (features D, the word axis as a lane dim) keep the
+plain next-multiple pad, and constant factors like 1/N are applied
+OUTSIDE the kernels so they never become static compile keys.
 
-Fused selection engine (DESIGN §Perf): ``pairwise_matrix`` computes the
-(N, C) cached matrix once per greedy invocation; ``fused_step`` performs one
-selection step over it (deferred winner-column update + masked gains +
-on-chip argmax); ``greedy_loop`` / ``greedy_loop_resident`` run the ENTIRE
-k-step selection in one dispatch (the whole-greedy megakernel);
-``fused_plan`` is the static three-way memory gate — resident / streaming /
-per-step fallback — with a bf16 cache-storage option (f32 accumulate) that
-doubles the HBM headroom before the paper's memory-capped fallback
-triggers.
+Engine planning (memory gates, tier selection, backend resolution) lives
+in kernels/plans.py; the legacy names (`fused_plan`, `stream_plan`,
+`fused_replicas`, …) are re-exported here for callers and tests.
 
-Streaming engine (DESIGN §Streaming): ``stream_filter`` folds one batch of
-B arrivals into ALL L sieve levels in one dispatch
-(kernels/stream_filter.py), gated by the ``stream_plan`` VMEM check with
-the jnp oracle (ref.stream_sieve) as fallback and parity ground truth.
+Fused selection engine (DESIGN §Perf): ``pairwise_matrix`` builds the
+(N, C) cached matrix once per greedy invocation (a transpose — not a
+dispatch — for bitmap rules); ``fused_step`` performs one selection step
+over it (deferred winner-column fold + masked gains + on-chip argmax);
+``greedy_loop`` / ``greedy_loop_resident`` run the ENTIRE k-step
+selection in one dispatch (the whole-greedy megakernel).
+
+Streaming engine (DESIGN §Streaming): ``stream_filter`` folds one batch
+of B arrivals into ALL L sieve levels in one dispatch
+(kernels/stream_filter.py), gated by ``stream_plan`` with the jnp oracle
+(ref.stream_sieve) as fallback and parity ground truth.
 """
 from __future__ import annotations
 
-import contextlib
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.runtime import flags
-from repro.kernels import ref
-from repro.kernels.coverage_gains import (TILE_C as COV_TC, TILE_W,
-                                          coverage_gains_pallas)
-from repro.kernels.facility_gains import facility_gains_pallas
+from repro.kernels import plans, ref
+from repro.kernels import rules as rules_mod
 from repro.kernels.fused_step import fused_step_pallas
 from repro.kernels.greedy_loop import (greedy_loop_pallas,
                                        greedy_loop_resident_pallas)
-from repro.kernels.kmedoid_gains import (TILE_C, TILE_N,
-                                         kmedoid_gains_pallas)
-from repro.kernels.pairwise import pairwise_pallas
+from repro.kernels.pairwise import (TILE_C, TILE_N, TILE_W, gains_pallas,
+                                    pairwise_pallas)
+from repro.kernels.plans import (EnginePlan, RES_TILE_N,  # noqa: F401
+                                 fused_block_n, fused_plan, fused_replicas,
+                                 loop_block_n, resident_fits,
+                                 resolve_backend, select_engine, stream_plan)
+from repro.kernels.rules import KernelRule
+from repro.runtime import flags
 
 F32 = jnp.float32
 
-_BIG = 3.0e38  # padding curmax sentinel (≈ f32 max; keeps inc at exactly 0)
-
-# resident-tier padding: accumulation-node shapes drift level by level, so
-# the ground-row axis buckets from a small base to keep the matrix (and the
-# compile cache) tight
-RES_TILE_N = 8
-
-# memory budgets / backend selection live behind typed accessors in
-# runtime/flags.py (one place to override in tests/benchmarks)
+# legacy aliases (tests/benchmarks poke these)
 _backend = flags.kernel_backend
+_bucket_len = plans.bucket_len
 
-
-def _bucket_len(size: int, tile: int) -> int:
-    """Next power-of-two multiple of `tile` ≥ size (jit-cache bucketing)."""
-    target = tile
-    while target < size:
-        target *= 2
-    return target
+# placeholder "ground" input for bitmap rules: their matrix is built from
+# the candidate payloads alone, but the kernels keep one uniform signature
+_DUMMY_GROUND = (8, 128)
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0,
@@ -86,43 +81,45 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0,
     return jnp.pad(x, widths, constant_values=value)
 
 
-def kmedoid_gains(ground, mind, cands, cand_valid, backend=None):
+def _dummy_ground():
+    return jnp.zeros(_DUMMY_GROUND, F32)
+
+
+def _row_pad_value(rule: KernelRule):
+    return int(rule.row_pad) if rule.is_bitmap else rule.row_pad
+
+
+def _cast_row(row, rule: KernelRule):
+    return row.astype(rule.dtype)
+
+
+def gains(ground, row, cands, cand_valid, rule: KernelRule, backend=None):
+    """Per-step marginal gains for any rule: RAW part sums (C,) f32, −inf
+    at invalid candidates. Callers normalize by the valid ground count.
+
+    Feature rules: ground (N, D), row (N,) state (mind/curmax/cursum),
+    cands (C, D). Bitmap rules: ground ignored (may be None), row (W,)
+    covered words, cands (C, W) candidate bitmaps.
+    """
     b = _backend(backend)
     if b == "ref":
-        return ref.kmedoid_gains(ground, mind, cands, cand_valid)
-    n, c = ground.shape[0], cands.shape[0]
+        return ref.gains(ground, _cast_row(row, rule), cands, cand_valid,
+                         rule)
+    c = cands.shape[0]
+    if rule.is_bitmap:
+        bits = _pad_to(_pad_to(cands, 0, TILE_C), 1, TILE_W, bucket=False)
+        r = _pad_to(_cast_row(row, rule), 0, TILE_W, bucket=False)
+        raw = gains_pallas(_dummy_ground(), r.reshape(1, -1), bits, rule,
+                           interpret=(b == "interpret"))[:c]
+        return jnp.where(cand_valid, raw, -jnp.inf)
     # feature axis never drifts between calls → plain 128-multiple pad
     g = _pad_to(_pad_to(ground, 0, TILE_N), 1, 128, bucket=False)
-    m = _pad_to(mind.astype(F32), 0, TILE_N)           # pad mind=0 ⇒ 0 gain
+    r = _pad_to(_cast_row(row, rule), 0, TILE_N,
+                value=_row_pad_value(rule))  # pad rows ⇒ zero gain part
     cd = _pad_to(_pad_to(cands, 0, TILE_C), 1, 128, bucket=False)
-    gains = kmedoid_gains_pallas(g, m, cd,
-                                 interpret=(b == "interpret"))[:c] / n
-    return jnp.where(cand_valid, gains, -jnp.inf)
-
-
-def facility_gains(ground, curmax, cands, cand_valid, backend=None):
-    b = _backend(backend)
-    if b == "ref":
-        return ref.facility_gains(ground, curmax, cands, cand_valid)
-    n, c = ground.shape[0], cands.shape[0]
-    g = _pad_to(_pad_to(ground, 0, TILE_N), 1, 128, bucket=False)
-    m = _pad_to(curmax.astype(F32), 0, TILE_N, value=_BIG)
-    cd = _pad_to(_pad_to(cands, 0, TILE_C), 1, 128, bucket=False)
-    gains = facility_gains_pallas(g, m, cd,
-                                  interpret=(b == "interpret"))[:c] / n
-    return jnp.where(cand_valid, gains, -jnp.inf)
-
-
-def coverage_gains(cand_bits, covered, cand_valid, backend=None):
-    b = _backend(backend)
-    if b == "ref":
-        return ref.coverage_gains(cand_bits, covered, cand_valid)
-    c = cand_bits.shape[0]
-    bits = _pad_to(_pad_to(cand_bits, 0, COV_TC), 1, TILE_W, bucket=False)
-    cov = _pad_to(covered, 0, TILE_W, bucket=False)
-    gains = coverage_gains_pallas(bits, cov,
-                                  interpret=(b == "interpret"))[:c]
-    return jnp.where(cand_valid, gains, -jnp.inf)
+    raw = gains_pallas(g, r.reshape(1, -1), cd, rule,
+                       interpret=(b == "interpret"))[:c]
+    return jnp.where(cand_valid, raw, -jnp.inf)
 
 
 # ---------------------------------------------------------------------------
@@ -130,189 +127,65 @@ def coverage_gains(cand_bits, covered, cand_valid, backend=None):
 # ---------------------------------------------------------------------------
 
 
-_VMAP_REPLICAS = 1          # caches live concurrently under vmap (trace-time)
-
-
-@contextlib.contextmanager
-def fused_replicas(n: int):
-    """Declare that the code traced inside holds `n` cached matrices alive
-    at once (e.g. vmapped leaf greedys in core/simulate.py) so fused_plan
-    divides the HBM budget accordingly. Trace-time only, like the plan:
-    a jit function compiled OUTSIDE the context replays its baked-in
-    replicas=1 decision on cache hits — trace (or build the jit wrapper)
-    inside the context, as simulate.py does. Not thread-safe."""
-    global _VMAP_REPLICAS
-    old = _VMAP_REPLICAS
-    _VMAP_REPLICAS = max(1, int(n))
-    try:
-        yield
-    finally:
-        _VMAP_REPLICAS = old
-
-
-def fused_block_n(n_pad: int, c_pad: int, itemsize: int = 4) -> int:
-    """Largest power-of-two row-block (≤256) whose fused-step working set
-    fits the VMEM budget; 0 if none fits.
-
-    Working set: the (BN, C) matrix slab (cache storage dtype), the
-    (BN, C) f32 relu-partials temporary the kernel materializes, the
-    (1, C) gains accumulator and mask blocks, and two (1, BN) state rows.
-    bf16 storage floors BN at its (16, 128) min tile.
-    """
-    vmem = flags.fused_vmem_mb() * 2 ** 20
-    bn_min = 16 if itemsize == 2 else 8
-    bn = 256
-    while bn >= bn_min:
-        if (bn <= n_pad
-                and (bn * c_pad * itemsize
-                     + (bn * c_pad + 3 * c_pad + 2 * bn) * 4) <= vmem):
-            return bn
-        bn //= 2
-    return 0
-
-
-def loop_block_n(n_pad: int, c_pad: int, itemsize: int = 4) -> int:
-    """Row block for the STREAMING megakernel tier; 0 if none fits.
-
-    Same per-block working set as fused_block_n plus the loop's persistent
-    scratch: the full (N/BN, BN) state row, the evolving (1, C) candidate
-    mask, and the (1, C) gains accumulator."""
-    vmem = flags.fused_vmem_mb() * 2 ** 20
-    bn_min = 16 if itemsize == 2 else 8
-    bn = 256
-    while bn >= bn_min:
-        if (bn <= n_pad
-                and (bn * c_pad * itemsize
-                     + (bn * c_pad + 4 * c_pad + n_pad + 2 * bn) * 4)
-                <= vmem):
-            return bn
-        bn //= 2
-    return 0
-
-
-def resident_fits(n_pad: int, c_pad: int, d_pad: int) -> bool:
-    """Whole-matrix VMEM residency check for the megakernel's resident
-    tier: (N, D)/(C, D) feature blocks, the on-chip (N, C) matrix, the
-    (N, C) relu-partials temporary, and the state/mask/gains rows — all
-    f32 (the matrix is built in-kernel; cache storage dtype is moot)."""
-    vmem = flags.fused_vmem_mb() * 2 ** 20
-    need = 4 * (n_pad * d_pad + c_pad * d_pad
-                + 2 * n_pad * c_pad
-                + 4 * c_pad + 4 * n_pad)
-    return need <= vmem
-
-
-def fused_plan(n: int, c: int, d: Optional[int] = None,
-               backend=None) -> Optional[dict]:
-    """Static (trace-time) three-way memory gate for the cached-matrix
-    engines (DESIGN §Perf).
-
-    Returns None when no (n, c) matrix fits the cache budget in any
-    permitted storage dtype — the paper's memory-capped regime (§6.4)
-    where callers must use the per-step engine. Otherwise a dict:
-
-      tier         'resident'  — the whole working set fits VMEM (requires
-                                 d); the megakernel builds the matrix
-                                 on-chip and the greedy is ONE dispatch
-                   'streaming' — cache in HBM, loop kernel re-reads it per
-                                 step; greedy is TWO dispatches
-                   'fused'     — cache fits HBM but the loop scratch does
-                                 not: per-step fused kernels only (k+1)
-      block_n      row block for the per-step fused kernel (0 on ref)
-      loop_block_n row block for the streaming loop kernel (0 unless
-                   tier == 'streaming' on a Pallas backend)
-      dtype        cache storage dtype, 'float32' | 'bfloat16' (bf16 is
-                   chosen when f32 busts the budget — or forced via
-                   REPRO_FUSED_CACHE_DTYPE — doubling HBM headroom;
-                   kernels accumulate in f32 either way)
-    """
-    b = _backend(backend)
-    if b == "ref":
-        n_pad, c_pad = n, c
-        n_res, d_pad = n, d
-    else:
-        n_pad, c_pad = _bucket_len(n, 256), _bucket_len(c, 128)
-        # the resident kernel pads its ground axis from the smaller
-        # RES_TILE_N base — gate it on what it will actually allocate
-        n_res = _bucket_len(n, RES_TILE_N)
-        d_pad = -(-d // 128) * 128 if d else None
-    cache = flags.fused_cache_mb() * 2 ** 20
-    pref = flags.fused_cache_dtype()
-    dtype, itemsize = None, 4
-    for cand, size in (("float32", 4), ("bfloat16", 2)):
-        if (pref, cand) in (("bf16", "float32"), ("f32", "bfloat16")):
-            continue
-        if n_pad * c_pad * size * _VMAP_REPLICAS <= cache:
-            dtype, itemsize = cand, size
-            break
-    if dtype is None:
-        return None
-    resident = d_pad is not None and resident_fits(n_res, c_pad, d_pad)
-    if b == "ref":
-        return {"tier": "resident" if resident else "streaming",
-                "block_n": 0, "loop_block_n": 0, "dtype": dtype}
-    bn = fused_block_n(n_pad, c_pad, itemsize)
-    if resident:
-        return {"tier": "resident", "block_n": bn, "loop_block_n": 0,
-                "dtype": dtype}
-    if bn == 0:
-        return None
-    bn_loop = loop_block_n(n_pad, c_pad, itemsize)
-    return {"tier": "streaming" if bn_loop else "fused",
-            "block_n": bn, "loop_block_n": bn_loop, "dtype": dtype}
-
-
-def pairwise_matrix(ground, cands, mode: str = "dist", backend=None,
+def pairwise_matrix(ground, cands, rule: KernelRule, backend=None,
                     dtype: str = "float32"):
-    """(N, D) × (C, D) → cached matrix ('dist' or 'dot').
+    """The cached ground×candidate matrix for any rule.
 
-    Pallas backends return the BUCKET-PADDED (N_pad, C_pad) matrix (padding
-    rows/cols carry junk that downstream masks neutralize); the ref backend
-    returns the logical (N, C). `fused_step`/`apply_column`/`masked_col_*`
-    accept either. ``dtype`` is the cache STORAGE dtype from the plan
-    ('bfloat16' halves HBM footprint; every consumer accumulates in f32).
+    Feature rules run the tiled pairwise kernel ((N, D) × (C, D) →
+    (N, C) in ``dtype``; 'bfloat16' halves the cache's HBM footprint,
+    consumers accumulate in f32). Bitmap rules TRANSPOSE the candidate
+    payloads — (C, W) uint32 → (W, C) — with zero kernel dispatches.
+
+    Pallas backends return the BUCKET-PADDED (N_pad, C_pad) matrix
+    (padding rows/cols carry junk that downstream masks neutralize); the
+    ref backend returns the logical (N, C). `fused_step` /
+    `apply_column` / `masked_col_reduce` accept either.
     """
     b = _backend(backend)
+    if rule.is_bitmap:
+        if b == "ref":
+            return cands.T
+        return _pad_to(_pad_to(cands, 0, 128), 1, 256).T   # (W_pad, C_pad)
     if b == "ref":
-        m = (ref.pairwise_dist(ground, cands) if mode == "dist"
-             else ref.pairwise_sim(ground, cands))
+        m = rules_mod.matrix_block(ground, cands, rule)
         return m if dtype == "float32" else m.astype(jnp.dtype(dtype))
     g = _pad_to(_pad_to(ground, 0, 256), 1, 128, bucket=False)
     cd = _pad_to(_pad_to(cands, 0, 128), 1, 128, bucket=False)
-    return pairwise_pallas(g, cd, mode=mode, out_dtype=dtype,
+    return pairwise_pallas(g, cd, mode=rule.pairwise, out_dtype=dtype,
                            interpret=(b == "interpret"))
 
 
-def fused_step(mat, row, mask, prev, mode: str = "min", backend=None,
-               plan: Optional[dict] = None):
+def fused_step(mat, row, mask, prev, rule: KernelRule, backend=None,
+               plan: Optional[EnginePlan] = None):
     """One fused greedy step over the cached matrix.
 
     mat: (N[, _pad], C[, _pad]) from `pairwise_matrix`; row: (n,) state
-    (mind/curmax); mask: (c,) bool candidate mask; prev: () int32 previous
-    winner (-1 = none). Returns (new_row (n,), best () int32, raw_gain ()).
-    ``plan``: the fused_plan dict, threaded through by callers so the row
-    block is not re-derived on every one of the k calls.
+    in the rule's row dtype; mask: (c,) bool candidate mask; prev: ()
+    int32 previous winner (-1 = none). Returns (new_row (n,), best ()
+    int32, raw_gain ()). ``plan``: the EnginePlan, threaded through by
+    callers so the row block is not re-derived on every one of the k
+    calls.
     """
     b = _backend(backend)
     n, c = row.shape[0], mask.shape[0]
     if b == "ref":
-        return ref.fused_step(mat, row.astype(F32), mask.astype(F32),
-                              prev, mode=mode)
+        return ref.fused_step(mat, _cast_row(row, rule),
+                              mask.astype(F32), prev, rule)
     n_pad, c_pad = mat.shape
-    pad_val = 0.0 if mode == "min" else _BIG
-    r = _pad_to(row.astype(F32), 0, n_pad, value=pad_val, bucket=False)
+    r = _pad_to(_cast_row(row, rule), 0, n_pad,
+                value=_row_pad_value(rule), bucket=False)
     mk = _pad_to(mask.astype(F32), 0, c_pad, bucket=False)
-    bn = (plan or {}).get("block_n") or fused_block_n(n_pad, c_pad,
-                                                      mat.dtype.itemsize)
-    assert bn, "fused_step called without a feasible plan (use fused_plan)"
-    new_row, best, gain = fused_step_pallas(mat, r, mk, prev, mode=mode,
+    bn = (plan.block_n if plan is not None else 0) or fused_block_n(
+        n_pad, c_pad, mat.dtype.itemsize)
+    assert bn, "fused_step called without a feasible plan (select_engine)"
+    new_row, best, gain = fused_step_pallas(mat, r, mk, prev, rule,
                                             block_n=bn,
                                             interpret=(b == "interpret"))
     return new_row[:n], best, gain
 
 
-def greedy_loop(mat, row, mask, k: int, mode: str = "min", backend=None,
-                plan: Optional[dict] = None):
+def greedy_loop(mat, row, mask, k: int, rule: KernelRule, backend=None,
+                plan: Optional[EnginePlan] = None):
     """STREAMING megakernel tier: the entire k-step greedy over an
     HBM-cached matrix in ONE dispatch (kernels/greedy_loop.py).
 
@@ -323,51 +196,53 @@ def greedy_loop(mat, row, mask, k: int, mode: str = "min", backend=None,
     b = _backend(backend)
     n, c = row.shape[0], mask.shape[0]
     if b == "ref":
-        return ref.greedy_loop(mat, row.astype(F32), mask.astype(F32), k,
-                               mode=mode)
+        return ref.greedy_loop(mat, _cast_row(row, rule),
+                               mask.astype(F32), k, rule)
     n_pad, c_pad = mat.shape
-    pad_val = 0.0 if mode == "min" else _BIG
-    r = _pad_to(row.astype(F32), 0, n_pad, value=pad_val,
+    r = _pad_to(_cast_row(row, rule), 0, n_pad,
+                value=_row_pad_value(rule),
                 bucket=False).reshape(1, n_pad)
     mk = _pad_to(mask.astype(F32), 0, c_pad, bucket=False).reshape(1, c_pad)
-    bn = (plan or {}).get("loop_block_n") or loop_block_n(
+    bn = (plan.loop_block_n if plan is not None else 0) or loop_block_n(
         n_pad, c_pad, mat.dtype.itemsize)
     assert bn, "greedy_loop called without a feasible streaming plan"
-    new_row, bests, gains = greedy_loop_pallas(mat, r, mk, k, mode=mode,
-                                               block_n=bn,
-                                               interpret=(b == "interpret"))
-    return new_row[:n], bests, gains
+    new_row, bests, gains_ = greedy_loop_pallas(mat, r, mk, k, rule,
+                                                block_n=bn,
+                                                interpret=(b == "interpret"))
+    return new_row[:n], bests, gains_
 
 
 def greedy_loop_resident(ground, cands, row, mask, k: int,
-                         pw_mode: str = "dist", mode: str = "min",
-                         backend=None):
-    """RESIDENT megakernel tier: pairwise matrix built ON-CHIP + all k
-    steps, one dispatch total — the accumulation-node fast path.
+                         rule: KernelRule, backend=None):
+    """RESIDENT megakernel tier: matrix built ON-CHIP + all k steps, one
+    dispatch total — the accumulation-node fast path.
 
-    ground: (N, D) evaluation rows, cands: (C, D), row: (n,) state, mask:
-    (c,) candidate mask; pw_mode 'dist' (k-medoid) | 'dot' (facility).
-    Returns as `greedy_loop`. Callers gate via fused_plan(..., d=D)
-    returning tier == 'resident'.
+    Feature rules: ground (N, D) evaluation rows, cands (C, D); bitmap
+    rules: ground ignored, cands (C, W) bitmaps (N = W). row: (n,) state,
+    mask: (c,) candidate mask. Returns as `greedy_loop`. Callers gate via
+    select_engine returning 'mega_resident'.
     """
     b = _backend(backend)
     n, c = row.shape[0], mask.shape[0]
     if b == "ref":
-        mat = (ref.pairwise_dist(ground, cands) if pw_mode == "dist"
-               else ref.pairwise_sim(ground, cands))
-        return ref.greedy_loop(mat, row.astype(F32), mask.astype(F32), k,
-                               mode=mode)
-    g = _pad_to(_pad_to(ground, 0, RES_TILE_N), 1, 128, bucket=False)
-    cd = _pad_to(_pad_to(cands, 0, 128), 1, 128, bucket=False)
-    n_pad, c_pad = g.shape[0], cd.shape[0]
-    pad_val = 0.0 if mode == "min" else _BIG
-    r = _pad_to(row.astype(F32), 0, RES_TILE_N,
-                value=pad_val).reshape(1, n_pad)
+        mat = ref.pairwise(ground, cands, rule)
+        return ref.greedy_loop(mat, _cast_row(row, rule),
+                               mask.astype(F32), k, rule)
+    if rule.is_bitmap:
+        g = _dummy_ground()
+        cd = _pad_to(_pad_to(cands, 0, 128), 1, 128)
+        n_pad, c_pad = cd.shape[1], cd.shape[0]
+        r = _pad_to(_cast_row(row, rule), 0, 128).reshape(1, n_pad)
+    else:
+        g = _pad_to(_pad_to(ground, 0, RES_TILE_N), 1, 128, bucket=False)
+        cd = _pad_to(_pad_to(cands, 0, 128), 1, 128, bucket=False)
+        n_pad, c_pad = g.shape[0], cd.shape[0]
+        r = _pad_to(_cast_row(row, rule), 0, RES_TILE_N,
+                    value=_row_pad_value(rule)).reshape(1, n_pad)
     mk = _pad_to(mask.astype(F32), 0, 128).reshape(1, c_pad)
-    new_row, bests, gains = greedy_loop_resident_pallas(
-        g, cd, r, mk, k, pw_mode=pw_mode, mode=mode,
-        interpret=(b == "interpret"))
-    return new_row[:n], bests, gains
+    new_row, bests, gains_ = greedy_loop_resident_pallas(
+        g, cd, r, mk, k, rule, interpret=(b == "interpret"))
+    return new_row[:n], bests, gains_
 
 
 def count_pallas_dispatches(jaxpr) -> int:
@@ -396,73 +271,59 @@ def count_pallas_dispatches(jaxpr) -> int:
 # ---------------------------------------------------------------------------
 
 
-def stream_plan(n: int, l: int, b: int, d: int,
-                backend=None) -> Optional[dict]:
-    """Static VMEM gate for the batched stream-filter kernel, in the style
-    of `fused_plan`: the kernel holds the (N, D)/(B, D) feature blocks, the
-    on-chip (N, B) matrix, the (L, N) level rows (in, out, and the relu
-    partials temporary), and the (L, B) admit matrix resident for the whole
-    dispatch. Returns {'tier': 'kernel'} when that fits the stream VMEM
-    budget, {'tier': 'ref'} on the jnp backend, and None when the Pallas
-    working set busts the budget — callers then use the ref.stream_sieve
-    oracle path (one fused jnp computation, still one jit call per batch).
-    """
-    bk = _backend(backend)
-    if bk == "ref":
-        return {"tier": "ref"}
-    n_pad = -(-n // RES_TILE_N) * RES_TILE_N
-    l_pad = -(-l // RES_TILE_N) * RES_TILE_N
-    b_pad = -(-b // 128) * 128
-    d_pad = -(-d // 128) * 128
-    need = 4 * (n_pad * d_pad + b_pad * d_pad + n_pad * b_pad
-                + 3 * l_pad * n_pad + 2 * l_pad * b_pad + 8 * l_pad)
-    if need <= flags.stream_vmem_mb() * 2 ** 20:
-        return {"tier": "kernel"}
-    return None
-
-
 def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
-                  bvalid, k: int, eps_log: float, pw_mode: str = "dist",
-                  mode: str = "min", backend=None,
-                  plan: Optional[dict] = None):
+                  bvalid, k: int, eps_log: float, rule: KernelRule,
+                  backend=None, plan: Optional[dict] = None):
     """One batch of B arrivals against all L sieve levels in ONE dispatch
-    (kernels/stream_filter.py) — the on-chip (N, B) matrix serves both
-    the singleton-gain re-anchor and the admission loop.
+    (kernels/stream_filter.py) — the on-chip matrix serves both the
+    singleton-gain re-anchor and the admission loop.
 
-    ground: (N, D) fixed evaluation set; batch: (B, D) arrival payloads;
-    rows: (L, N) per-level state (mind/curmax); row0: (N,) empty-solution
-    row; values: (L,) raw units; counts/expos: (L,) i32; m_max: () f32;
-    bvalid: (B,) bool/0-1; eps_log: log(1+ε) (static). Returns (rows
-    (L, N), values (L,), counts (L,), admits (L, B) bool, expos (L,),
-    m_new (), expired (L,) bool). ``plan``: the stream_plan dict,
-    threaded through so the gate is not re-derived per batch; a
-    non-kernel plan (or None) routes to the jnp oracle.
+    Feature rules: ground (N, D) fixed evaluation set, batch (B, D)
+    arrival payloads. Bitmap rules: ground ignored (may be None), batch
+    (B, W) arrival bitmaps (N = W). rows: (L, N) per-level state in the
+    rule's row dtype; row0: (N,) empty-solution row; values: (L,) raw
+    units; counts/expos: (L,) i32; m_max: () f32; bvalid: (B,) bool/0-1;
+    eps_log: log(1+ε) (static). Returns (rows (L, N), values (L,),
+    counts (L,), admits (L, B) bool, expos (L,), m_new (), expired (L,)
+    bool). ``plan``: the stream_plan dict, threaded through so the gate
+    is not re-derived per batch; a non-kernel plan (or None) routes to
+    the jnp oracle.
     """
     from repro.kernels.stream_filter import stream_filter_pallas
     bk = _backend(backend)
-    n, l, b = ground.shape[0], rows.shape[0], batch.shape[0]
-    plan = plan if plan is not None else stream_plan(
-        n, l, b, ground.shape[1], backend=backend)
+    l, b = rows.shape[0], batch.shape[0]
+    n = rows.shape[1]
+    d = None if rule.is_bitmap else ground.shape[1]
+    plan = plan if plan is not None else stream_plan(n, l, b, d,
+                                                     backend=backend,
+                                                     rule=rule)
     if bk == "ref" or plan is None or plan.get("tier") != "kernel":
-        mat = (ref.pairwise_dist(ground, batch) if pw_mode == "dist"
-               else ref.pairwise_sim(ground, batch))
-        rows, values, counts, admits, expos, m_new, expired = \
-            ref.stream_sieve(mat, row0.astype(F32), rows,
-                             values.astype(F32), counts, expos,
-                             m_max, bvalid.astype(F32), k, eps_log,
-                             mode=mode)
-        return rows, values, counts, admits > 0, expos, m_new, expired > 0
+        mat = ref.pairwise(ground, batch, rule)
+        rows_, values_, counts_, admits, expos_, m_new, expired = \
+            ref.stream_sieve(mat, _cast_row(row0, rule),
+                             _cast_row(rows, rule), values.astype(F32),
+                             counts, expos, m_max, bvalid.astype(F32), k,
+                             eps_log, rule)
+        return (rows_, values_, counts_, admits > 0, expos_, m_new,
+                expired > 0)
     assert l % RES_TILE_N == 0, \
         f"levels ({l}) must be a multiple of {RES_TILE_N} on Pallas " \
         "backends (SieveStreamer rounds up)"
-    row_pad = 0.0 if mode == "min" else _BIG
-    g = _pad_to(_pad_to(ground, 0, RES_TILE_N, bucket=False), 1, 128,
+    pad_val = _row_pad_value(rule)
+    if rule.is_bitmap:
+        g = _dummy_ground()
+        bt = _pad_to(_pad_to(batch, 0, 128, bucket=False), 1, 128,
+                     bucket=False)
+        n_pad = bt.shape[1]
+    else:
+        g = _pad_to(_pad_to(ground, 0, RES_TILE_N, bucket=False), 1, 128,
+                    bucket=False)
+        bt = _pad_to(_pad_to(batch, 0, 128, bucket=False), 1, 128,
+                     bucket=False)
+        n_pad = g.shape[0]
+    r = _pad_to(_cast_row(rows, rule), 1, n_pad, value=pad_val,
                 bucket=False)
-    bt = _pad_to(_pad_to(batch, 0, 128, bucket=False), 1, 128, bucket=False)
-    n_pad = g.shape[0]
-    r = _pad_to(rows.astype(F32), 1, RES_TILE_N, value=row_pad,
-                bucket=False)
-    r0 = _pad_to(row0.astype(F32), 0, RES_TILE_N, value=row_pad,
+    r0 = _pad_to(_cast_row(row0, rule), 0, n_pad, value=pad_val,
                  bucket=False).reshape(1, n_pad)
     vals = values.astype(F32).reshape(l, 1)
     cnt = counts.astype(jnp.int32).reshape(l, 1)
@@ -471,28 +332,46 @@ def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
     bv = _pad_to(bvalid.astype(F32).reshape(1, b), 1, 128, bucket=False)
     rows_o, vals_o, cnt_o, admits, expos_o, m_o, expired = \
         stream_filter_pallas(g, bt, r, r0, vals, cnt, exp_, m_, bv, k,
-                             eps_log, pw_mode=pw_mode, mode=mode,
-                             interpret=(bk == "interpret"))
+                             eps_log, rule, interpret=(bk == "interpret"))
     return (rows_o[:, :n], vals_o[:, 0], cnt_o[:, 0], admits[:, :b] > 0,
             expos_o[:, 0], m_o[0, 0], expired[:, 0] > 0)
 
 
-def apply_column(mat, row, idx, mode: str = "min"):
+# ---------------------------------------------------------------------------
+# column folds over the cached matrix (flush + batched replay)
+# ---------------------------------------------------------------------------
+
+
+def apply_column(mat, row, idx, rule: KernelRule):
     """Fold column `idx` of the cached matrix into the state row (flush of
     the deferred final-step update); idx < 0 is a no-op. Pure jnp — O(N)."""
     col = lax.dynamic_slice_in_dim(mat, jnp.maximum(idx, 0), 1,
-                                   axis=1)[: row.shape[0], 0].astype(F32)
-    upd = jnp.minimum(row, col) if mode == "min" else jnp.maximum(row, col)
+                                   axis=1)[: row.shape[0], 0]
+    upd = rules_mod.fold_cols(row, col, rule)
     return jnp.where(idx >= 0, upd, row)
 
 
-def masked_col_reduce(mat, col_valid, row, mode: str = "min"):
+def masked_col_reduce(mat, col_valid, row, rule: KernelRule):
     """Batched replay: fold ALL valid columns of the cached matrix into the
-    state row in one pass (replaces the sequential k-step update scan)."""
+    state row in one pass (replaces the sequential k-step update scan).
+    Valid for every fold: min/max are idempotent reductions, OR is one
+    union, and the saturated add telescopes — min(cap, min(cap, r+a)+b) ≡
+    min(cap, r+a+b) for a, b ≥ 0."""
     n, c = row.shape[0], col_valid.shape[0]
-    sub = mat[:n, :c].astype(F32)
-    if mode == "min":
+    sub = mat[:n, :c]
+    if rule.fold == "or":
+        masked = jnp.where(col_valid[None, :], sub, jnp.uint32(0))
+        union = lax.reduce(masked, jnp.uint32(0), lax.bitwise_or, [1])
+        return jnp.bitwise_or(row, union)
+    sub = sub.astype(F32)
+    if rule.fold == "min":
         vals = jnp.where(col_valid[None, :], sub, jnp.inf)
         return jnp.minimum(row, jnp.min(vals, axis=1))
-    vals = jnp.where(col_valid[None, :], sub, -jnp.inf)
-    return jnp.maximum(row, jnp.max(vals, axis=1))
+    if rule.fold == "max":
+        vals = jnp.where(col_valid[None, :], sub, -jnp.inf)
+        return jnp.maximum(row, jnp.max(vals, axis=1))
+    if rule.fold == "satsum":
+        inc = jnp.sum(jnp.where(col_valid[None, :],
+                                jnp.maximum(sub, 0.0), 0.0), axis=1)
+        return jnp.minimum(row + inc, rule.cap)
+    raise KeyError(rule.fold)

@@ -1,17 +1,27 @@
-"""Pallas TPU kernel: tiled pairwise distance / similarity matrix.
+"""Pallas TPU kernels: pairwise matrix materialization + the ONE
+rule-parameterized per-step gains kernel.
 
-The fused selection engine's `prepare()` stage (DESIGN §Perf): compute the
-(N, C) ground×candidate matrix ONCE per greedy invocation, so each of the k
-selection steps becomes a cheap (N, C) masked reduction instead of a fresh
-O(N·C·D) matmul. Modes:
+Two entry points, both driven by a `KernelRule` (kernels/rules.py):
 
-  * 'dist' — Euclidean distance sqrt(‖x‖² + ‖c‖² − 2⟨x, c⟩)  (k-medoid)
-  * 'dot'  — inner product ⟨x, c⟩                            (facility)
+  * ``pairwise_pallas`` — the fused engine's `prepare()` stage (DESIGN
+    §Perf): compute the (N, C) ground×candidate matrix ONCE per greedy
+    invocation for the feature rules ('dist' k-medoid, 'dot'
+    facility/satcover). Bitmap rules never reach it — their matrix is a
+    transpose of the candidate payloads, built by ops.py without a
+    dispatch. Grid: (N/TN, C/TC); each block is one MXU matmul over the
+    full feature dim.
 
-Grid: (N/TN, C/TC); each block is one MXU matmul over the full feature dim
-with the (TN, D)/(TC, D) feature blocks resident in VMEM.
-VMEM per block: TN·D·4 + TC·D·4 + TN·TC·4 ≈ 1.9 MB at D=768 — same budget
-as the per-step gains kernels this replaces.
+  * ``gains_pallas`` — the per-step (uncached) marginal-gains pass, the
+    paper's memory-capped regime. This single kernel replaces the three
+    per-objective kernels (kmedoid_gains / facility_gains /
+    coverage_gains) that predated the objective protocol: the rule picks
+    the matrix op and the gain part, so feature rules tile
+    (TC candidates × TN ground rows) with an MXU matmul per block, and
+    bitmap rules tile (TC × TW words) with AND-NOT + popcount — partial
+    sums accumulate over the inner grid dimension in f32 either way.
+
+VMEM per block: TN·D·4 + TC·D·4 + TN·TC·4 ≈ 1.9 MB at D=768 (feature
+rules) / TC·TW·4 ≈ 0.25 MB (bitmap rules).
 """
 from __future__ import annotations
 
@@ -21,27 +31,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import rules as R
+from repro.kernels.rules import KernelRule, pairwise_block  # noqa: F401
 from repro.kernels.tpu_compat import compiler_params
 
 F32 = jnp.float32
 
-TILE_N = 256
-TILE_C = 128
-
-
-def pairwise_block(g, c, mode: str):
-    """(TN, D) × (TC, D) feature blocks → (TN, TC) matrix block, f32.
-
-    The single source of the ‖g‖²+‖c‖²−2⟨g,c⟩ expansion — shared with the
-    resident megakernel (kernels/greedy_loop.py) so the engines stay
-    bit-identical."""
-    cross = jax.lax.dot_general(g, c, (((1,), (1,)), ((), ())),
-                                preferred_element_type=F32)   # (TN, TC)
-    if mode == "dot":
-        return cross
-    gn = jnp.sum(g * g, axis=1, keepdims=True)         # (TN, 1)
-    cn = jnp.sum(c * c, axis=1, keepdims=True).T       # (1, TC)
-    return jnp.sqrt(jnp.maximum(gn + cn - 2.0 * cross, 0.0))
+TILE_N = 256        # ground rows per block (feature rules)
+TILE_C = 128        # candidates per block
+TILE_W = 512        # universe words per block (bitmap rules)
 
 
 def _kernel(ground_ref, cands_ref, out_ref, *, mode: str):
@@ -78,3 +76,67 @@ def pairwise_pallas(ground: jax.Array, cands: jax.Array, mode: str = "dist",
         compiler_params=compiler_params("parallel", "parallel"),
         interpret=interpret,
     )(ground, cands)
+
+
+def _gains_kernel(ground_ref, row_ref, cands_ref, out_ref, *,
+                  rule: KernelRule):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += R.block_gains(ground_ref[...], cands_ref[...],
+                                  row_ref[...], rule)
+
+
+@functools.partial(jax.jit, static_argnames=("rule", "interpret"))
+def gains_pallas(ground: jax.Array, row: jax.Array, cands: jax.Array,
+                 rule: KernelRule, interpret: bool = False) -> jax.Array:
+    """RAW marginal-gain sums (C,) f32 for ANY registered rule (callers
+    normalize outside the kernel so the logical N never becomes a static
+    compile key).
+
+    Feature rules: ground (N, D), row (1, N) state (mind/curmax/cursum),
+    cands (C, D); grid (C/TC, N/TN), N innermost (output-block revisiting
+    accumulation). Padded ground rows must carry row = rule.row_pad (⇒
+    zero contribution); the ops.py wrapper guarantees this.
+
+    Bitmap rules: ground is an ignored (8, 128) placeholder, row (1, W)
+    covered words, cands (C, W) candidate bitmaps; grid (C/TC, W/TW).
+    Zero-padded bits/words contribute zero gain.
+    """
+    c = cands.shape[0]
+    if rule.is_bitmap:
+        w = cands.shape[1]
+        assert c % TILE_C == 0 and w % TILE_W == 0, (c, w)
+        assert row.shape == (1, w)
+        grid = (c // TILE_C, w // TILE_W)
+        in_specs = [
+            pl.BlockSpec(ground.shape, lambda ci, ni: (0, 0)),
+            pl.BlockSpec((1, TILE_W), lambda ci, ni: (0, ni)),
+            pl.BlockSpec((TILE_C, TILE_W), lambda ci, ni: (ci, ni)),
+        ]
+    else:
+        n, d = ground.shape
+        assert n % TILE_N == 0 and c % TILE_C == 0 and d % 128 == 0
+        assert row.shape == (1, n) and cands.shape[1] == d
+        grid = (c // TILE_C, n // TILE_N)
+        in_specs = [
+            pl.BlockSpec((TILE_N, d), lambda ci, ni: (ni, 0)),
+            pl.BlockSpec((1, TILE_N), lambda ci, ni: (0, ni)),
+            pl.BlockSpec((TILE_C, d), lambda ci, ni: (ci, 0)),
+        ]
+    out = pl.pallas_call(
+        functools.partial(_gains_kernel, rule=rule),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, TILE_C), lambda ci, ni: (0, ci)),
+        out_shape=jax.ShapeDtypeStruct((1, c), F32),
+        # candidate blocks are independent (parallel); the inner
+        # ground/word dim accumulates into the revisited output block
+        # (arbitrary), which Mosaic can still software-pipeline
+        compiler_params=compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(ground, row, cands)
+    return out[0]

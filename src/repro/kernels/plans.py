@@ -1,0 +1,319 @@
+"""Engine planning: one place that turns (rule, shapes, budgets) into the
+selection engine every caller runs (DESIGN §Objective protocol).
+
+`select_engine` is the single decision point that used to be scattered
+across `hasattr(objective, ...)` duck-typing in core/greedy.py, per-class
+`prepare` gates in core/functions.py, and the ops.fused_plan dict: it
+resolves the backend, applies the HBM/VMEM budget math below, honors the
+caller's requested engine, and returns an `EnginePlan` that the kernels
+consume verbatim (block sizes, cache dtype) — so no layer re-derives
+memory decisions per step.
+
+The low-level budget gates (`fused_plan`, `stream_plan`) remain available
+for tests and benchmarks; they are rule-aware: bitmap rules store uint32
+matrices (no bf16 option) and need no feature dim for residency.
+
+Backends resolve through `resolve_backend` (the public face of
+runtime.flags.kernel_backend): 'auto' → compiled Pallas on TPU, jnp
+reference elsewhere; 'interpret' runs the kernel bodies on CPU.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+from repro.kernels.rules import KernelRule
+from repro.runtime import flags
+
+# resident-tier padding base: accumulation-node shapes drift level by
+# level, so the ground-row axis buckets from a small base to keep the
+# on-chip matrix (and the compile cache) tight
+RES_TILE_N = 8
+
+ENGINES = ("step", "fused", "mega_stream", "mega_resident")
+
+
+def resolve_backend(override: Optional[str] = None) -> str:
+    """Public backend resolution — explicit override, then
+    REPRO_KERNEL_BACKEND, then 'auto' (Pallas on TPU, jnp elsewhere)."""
+    return flags.kernel_backend(override)
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePlan:
+    """The planner's verdict for one greedy invocation.
+
+    engine        'step' | 'fused' | 'mega_stream' | 'mega_resident'
+    rule          the objective's KernelRule
+    backend       resolved backend ('pallas' | 'interpret' | 'ref')
+    tier          raw fused_plan tier ('resident'|'streaming'|'fused'),
+                  None when the budget gate refused every cached engine
+    block_n       row block for the per-step fused kernel (0 on ref)
+    loop_block_n  row block for the streaming loop kernel
+    dtype         cache storage dtype ('float32'|'bfloat16'|'uint32')
+    """
+    engine: str
+    rule: KernelRule
+    backend: str
+    tier: Optional[str] = None
+    block_n: int = 0
+    loop_block_n: int = 0
+    dtype: str = "float32"
+
+    @property
+    def cached(self) -> bool:
+        return self.engine != "step"
+
+
+def bucket_len(size: int, tile: int) -> int:
+    """Next power-of-two multiple of `tile` ≥ size (jit-cache bucketing)."""
+    target = tile
+    while target < size:
+        target *= 2
+    return target
+
+
+# ---------------------------------------------------------------------------
+# VMEM / HBM budget math
+# ---------------------------------------------------------------------------
+
+_VMAP_REPLICAS = 1          # caches live concurrently under vmap (trace-time)
+
+
+@contextlib.contextmanager
+def fused_replicas(n: int):
+    """Declare that the code traced inside holds `n` cached matrices alive
+    at once (e.g. vmapped leaf greedys in core/simulate.py) so fused_plan
+    divides the HBM budget accordingly. Trace-time only, like the plan:
+    a jit function compiled OUTSIDE the context replays its baked-in
+    replicas=1 decision on cache hits — trace (or build the jit wrapper)
+    inside the context, as simulate.py does. Not thread-safe."""
+    global _VMAP_REPLICAS
+    old = _VMAP_REPLICAS
+    _VMAP_REPLICAS = max(1, int(n))
+    try:
+        yield
+    finally:
+        _VMAP_REPLICAS = old
+
+
+def fused_block_n(n_pad: int, c_pad: int, itemsize: int = 4) -> int:
+    """Largest power-of-two row-block (≤256) whose fused-step working set
+    fits the VMEM budget; 0 if none fits.
+
+    Working set: the (BN, C) matrix slab (cache storage dtype), the
+    (BN, C) f32 gain-partials temporary the kernel materializes, the
+    (1, C) gains accumulator and mask blocks, and two (1, BN) state rows.
+    bf16 storage floors BN at its (16, 128) min tile.
+    """
+    vmem = flags.fused_vmem_mb() * 2 ** 20
+    bn_min = 16 if itemsize == 2 else 8
+    bn = 256
+    while bn >= bn_min:
+        if (bn <= n_pad
+                and (bn * c_pad * itemsize
+                     + (bn * c_pad + 3 * c_pad + 2 * bn) * 4) <= vmem):
+            return bn
+        bn //= 2
+    return 0
+
+
+def loop_block_n(n_pad: int, c_pad: int, itemsize: int = 4) -> int:
+    """Row block for the STREAMING megakernel tier; 0 if none fits.
+
+    Same per-block working set as fused_block_n plus the loop's persistent
+    scratch: the full (N/BN, BN) state row, the evolving (1, C) candidate
+    mask, and the (1, C) gains accumulator."""
+    vmem = flags.fused_vmem_mb() * 2 ** 20
+    bn_min = 16 if itemsize == 2 else 8
+    bn = 256
+    while bn >= bn_min:
+        if (bn <= n_pad
+                and (bn * c_pad * itemsize
+                     + (bn * c_pad + 4 * c_pad + n_pad + 2 * bn) * 4)
+                <= vmem):
+            return bn
+        bn //= 2
+    return 0
+
+
+def resident_fits(n_pad: int, c_pad: int, d_pad: Optional[int],
+                  rule: Optional[KernelRule] = None) -> bool:
+    """Whole-working-set VMEM residency check for the megakernel's
+    resident tier. Feature rules hold the (N, D)/(C, D) blocks, the
+    on-chip (N, C) matrix, its gain-partials temporary, and the
+    state/mask/gains rows — all f32 (the matrix is built in-kernel, so
+    the cache storage dtype is moot). Bitmap rules hold the (C, W) bits
+    input, the transposed (W, C) matrix, and the f32 partials instead —
+    no feature blocks at all."""
+    vmem = flags.fused_vmem_mb() * 2 ** 20
+    if rule is not None and rule.is_bitmap:
+        need = 4 * (3 * n_pad * c_pad + 4 * c_pad + 4 * n_pad)
+        return need <= vmem
+    if d_pad is None:
+        return False
+    need = 4 * (n_pad * d_pad + c_pad * d_pad
+                + 2 * n_pad * c_pad
+                + 4 * c_pad + 4 * n_pad)
+    return need <= vmem
+
+
+def fused_plan(n: int, c: int, d: Optional[int] = None,
+               backend=None, rule: Optional[KernelRule] = None
+               ) -> Optional[dict]:
+    """Static (trace-time) three-way memory gate for the cached-matrix
+    engines (DESIGN §Perf).
+
+    Returns None when no (n, c) matrix fits the cache budget in any
+    permitted storage dtype — the paper's memory-capped regime (§6.4)
+    where callers must use the per-step engine. Otherwise a dict:
+
+      tier         'resident'  — the whole working set fits VMEM; the
+                                 megakernel builds the matrix on-chip
+                                 (feature rules need d) and the greedy is
+                                 ONE dispatch
+                   'streaming' — cache in HBM, loop kernel re-reads it per
+                                 step; greedy is TWO dispatches (ONE for
+                                 bitmap rules: their prepare is a
+                                 transpose, not a kernel)
+                   'fused'     — cache fits HBM but the loop scratch does
+                                 not: per-step fused kernels only (k+1)
+      block_n      row block for the per-step fused kernel (0 on ref)
+      loop_block_n row block for the streaming loop kernel (0 unless
+                   tier == 'streaming' on a Pallas backend)
+      dtype        cache storage dtype: 'float32' | 'bfloat16' for feature
+                   rules (bf16 chosen when f32 busts the budget — or
+                   forced via REPRO_FUSED_CACHE_DTYPE — doubling HBM
+                   headroom; kernels accumulate in f32 either way);
+                   bitmap rules always store 'uint32'
+    """
+    b = resolve_backend(backend)
+    bitmap = rule is not None and rule.is_bitmap
+    if b == "ref":
+        n_pad, c_pad = n, c
+        n_res, d_pad = n, d
+    else:
+        n_pad, c_pad = bucket_len(n, 256), bucket_len(c, 128)
+        # gate the resident tier on what the kernel will actually
+        # allocate: feature rules pad the ground axis from the small
+        # RES_TILE_N base, but bitmap rules pad their word axis to a
+        # 128-lane multiple (it is the last axis of the bits input)
+        n_res = bucket_len(n, 128 if bitmap else RES_TILE_N)
+        d_pad = -(-d // 128) * 128 if d else None
+    cache = flags.fused_cache_mb() * 2 ** 20
+    pref = flags.fused_cache_dtype()
+    dtype, itemsize = None, 4
+    if bitmap:
+        if n_pad * c_pad * 4 * _VMAP_REPLICAS <= cache:
+            dtype = "uint32"
+    else:
+        for cand, size in (("float32", 4), ("bfloat16", 2)):
+            if (pref, cand) in (("bf16", "float32"), ("f32", "bfloat16")):
+                continue
+            if n_pad * c_pad * size * _VMAP_REPLICAS <= cache:
+                dtype, itemsize = cand, size
+                break
+    if dtype is None:
+        return None
+    resident = ((bitmap or d_pad is not None)
+                and resident_fits(n_res, c_pad, d_pad, rule=rule))
+    if b == "ref":
+        return {"tier": "resident" if resident else "streaming",
+                "block_n": 0, "loop_block_n": 0, "dtype": dtype}
+    bn = fused_block_n(n_pad, c_pad, itemsize)
+    if resident:
+        return {"tier": "resident", "block_n": bn, "loop_block_n": 0,
+                "dtype": dtype}
+    if bn == 0:
+        return None
+    bn_loop = loop_block_n(n_pad, c_pad, itemsize)
+    return {"tier": "streaming" if bn_loop else "fused",
+            "block_n": bn, "loop_block_n": bn_loop, "dtype": dtype}
+
+
+def stream_plan(n: int, l: int, b: int, d: Optional[int],
+                backend=None, rule: Optional[KernelRule] = None
+                ) -> Optional[dict]:
+    """Static VMEM gate for the batched stream-filter kernel, in the style
+    of `fused_plan`. Feature rules hold the (N, D)/(B, D) feature blocks,
+    the on-chip (N, B) matrix, the (L, N) level rows (in, out, and the
+    gain-partials temporary), and the (L, B) admit matrix resident for
+    the whole dispatch; bitmap rules swap the feature blocks for the
+    (B, W) bits input (N = W). Returns {'tier': 'kernel'} when that fits
+    the stream VMEM budget, {'tier': 'ref'} on the jnp backend, and None
+    when the Pallas working set busts the budget — callers then use the
+    ref.stream_sieve oracle path (one fused jnp computation, still one
+    jit call per batch).
+    """
+    bk = resolve_backend(backend)
+    if bk == "ref":
+        return {"tier": "ref"}
+    bitmap = rule is not None and rule.is_bitmap
+    n_pad = -(-n // RES_TILE_N) * RES_TILE_N
+    l_pad = -(-l // RES_TILE_N) * RES_TILE_N
+    b_pad = -(-b // 128) * 128
+    if bitmap:
+        n_pad = -(-n // 128) * 128          # words are a lane dim too
+        feat = b_pad * n_pad                # the (B, W) bits input
+    else:
+        d_pad = -(-(d or 0) // 128) * 128
+        feat = n_pad * d_pad + b_pad * d_pad
+    need = 4 * (feat + n_pad * b_pad
+                + 3 * l_pad * n_pad + 2 * l_pad * b_pad + 8 * l_pad)
+    if need <= flags.stream_vmem_mb() * 2 ** 20:
+        return {"tier": "kernel"}
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+
+def select_engine(rule: KernelRule, n: int, c: int,
+                  d: Optional[int] = None, *, requested: str = "auto",
+                  sampling: bool = False, constrained: bool = False,
+                  backend: Optional[str] = None) -> EnginePlan:
+    """Resolve the selection engine for one greedy invocation.
+
+    n: ground rows (universe WORDS for bitmap rules), c: candidates,
+    d: feature dim (None for bitmap rules). `requested` is the caller's
+    greedy(engine=...) argument; `sampling`/`constrained` mark the
+    branches that need per-step host logic and therefore demote the
+    megakernel to the fused scan (identical selections either way):
+
+      auto   megakernel when the tier gate admits it and neither branch
+             is active; fused when the cache fits and sampling is off
+             (under sampling the step path evaluates only `sample`
+             candidates — cheaper than k whole-(N, C) reductions);
+             per-step otherwise
+      mega   megakernel, falling back to fused (constraints/sampling or
+             no loop tier), then step (budget-refused cache)
+      fused  the cached per-step engine even under sampling; step when
+             the cache busts the budget
+      step   always the legacy recompute-per-step path
+    """
+    if requested not in ("auto", "mega", "fused", "step"):
+        raise ValueError(f"unknown engine {requested!r}; "
+                         "expected 'auto', 'mega', 'fused', or 'step'")
+    b = resolve_backend(backend)
+    step = EnginePlan("step", rule, b)
+    if requested == "step":
+        return step
+    fp = fused_plan(n, c, d=d, backend=b, rule=rule)
+    if fp is None:
+        return step                         # paper's memory-capped regime
+    mega_ok = (requested in ("auto", "mega") and not sampling
+               and not constrained and fp["tier"] in ("resident",
+                                                      "streaming"))
+    if mega_ok:
+        engine = ("mega_resident" if fp["tier"] == "resident"
+                  else "mega_stream")
+    elif requested in ("fused", "mega") or not sampling:
+        engine = "fused"
+    else:
+        return step                         # auto + sampling: step wins
+    return EnginePlan(engine, rule, b, tier=fp["tier"],
+                      block_n=fp["block_n"],
+                      loop_block_n=fp["loop_block_n"], dtype=fp["dtype"])

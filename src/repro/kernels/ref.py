@@ -1,68 +1,30 @@
-"""Pure-jnp oracles for every Pallas kernel.
+"""Pure-jnp oracles for every Pallas kernel, rule-parameterized.
 
-These are the semantic ground truth: each kernel's test sweeps shapes/dtypes
-and asserts allclose against the function here. They are also the execution
-backend on CPU (ops.py dispatches: compiled Pallas on TPU, interpret-mode
-Pallas in kernel tests, jnp reference everywhere else).
+These are the semantic ground truth: each kernel's test sweeps shapes and
+rules and asserts allclose against the function here. They are also the
+execution backend on CPU (ops.py dispatches: compiled Pallas on TPU,
+interpret-mode Pallas in kernel tests, jnp reference everywhere else).
+
+All objective math comes from the shared rule primitives
+(kernels/rules.py) — the SAME functions the kernel bodies trace — so
+oracle and kernel semantics cannot drift; only the tiling/accumulation
+structure differs.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import rules as R
+from repro.kernels.rules import KernelRule
+
 F32 = jnp.float32
-
-
-def kmedoid_gains(ground: jax.Array, mind: jax.Array, cands: jax.Array,
-                  cand_valid: jax.Array) -> jax.Array:
-    """Marginal gains for the k-medoid loss (paper §4.2).
-
-    ground: (N, D) evaluation ground set; mind: (N,) current min distance of
-    each ground element to the solution (∞-like before any selection);
-    cands: (C, D); cand_valid: (C,) bool.
-    Returns (C,) gains: mean(mind) - mean(min(mind, dist(·, c))).
-    Distance = Euclidean (non-squared), matching the paper's Tiny-ImageNet
-    setup.
-    """
-    n = ground.shape[0]
-    dist = pairwise_dist(ground, cands)                # (N, C)
-    new_mind = jnp.minimum(mind[:, None], dist)
-    gains = jnp.sum(mind[:, None] - new_mind, axis=0) / n
-    return jnp.where(cand_valid, gains, -jnp.inf)
-
-
-def facility_gains(ground: jax.Array, curmax: jax.Array, cands: jax.Array,
-                   cand_valid: jax.Array) -> jax.Array:
-    """Facility-location marginal gains.
-
-    sim = inner product; gain(c) = mean(max(0, sim(·,c) - curmax)).
-    """
-    n = ground.shape[0]
-    sim = pairwise_sim(ground, cands)                  # (N, C)
-    inc = jnp.maximum(sim - curmax[:, None], 0.0)
-    gains = jnp.sum(inc, axis=0) / n
-    return jnp.where(cand_valid, gains, -jnp.inf)
-
-
-def coverage_gains(cand_bits: jax.Array, covered: jax.Array,
-                   cand_valid: jax.Array) -> jax.Array:
-    """k-cover / k-dominating-set marginal gains on packed bitmaps.
-
-    cand_bits: (C, W) uint32 coverage bitmaps; covered: (W,) uint32 current
-    covered set. gain(c) = popcount(cand_bits[c] & ~covered).
-    """
-    new = jnp.bitwise_and(cand_bits, jnp.bitwise_not(covered)[None, :])
-    gains = jnp.sum(jax.lax.population_count(new).astype(jnp.int32), axis=-1)
-    return jnp.where(cand_valid, gains.astype(F32), -jnp.inf)
 
 
 def pairwise_dist(ground: jax.Array, cands: jax.Array) -> jax.Array:
     """(N, D) × (C, D) → (N, C) Euclidean distances, the k-medoid cached
     matrix (same ‖x‖²+‖c‖²−2⟨x,c⟩ expansion as the tiled kernel)."""
-    sq = (jnp.sum(ground.astype(F32) ** 2, -1)[:, None]
-          + jnp.sum(cands.astype(F32) ** 2, -1)[None, :]
-          - 2.0 * ground.astype(F32) @ cands.astype(F32).T)
-    return jnp.sqrt(jnp.maximum(sq, 0.0))
+    return R.pairwise_block(ground.astype(F32), cands.astype(F32), "dist")
 
 
 def pairwise_sim(ground: jax.Array, cands: jax.Array) -> jax.Array:
@@ -70,60 +32,72 @@ def pairwise_sim(ground: jax.Array, cands: jax.Array) -> jax.Array:
     return ground.astype(F32) @ cands.astype(F32).T
 
 
+def pairwise(ground, cands, rule: KernelRule) -> jax.Array:
+    """Full logical cached matrix for any rule: feature rules do the
+    pairwise compute; bitmap rules just transpose the payloads (the
+    candidate bitmaps ARE the matrix columns)."""
+    if rule.is_bitmap:
+        return cands.T
+    return R.matrix_block(ground, cands, rule)
+
+
+def gains(ground, row, cands, cand_valid, rule: KernelRule) -> jax.Array:
+    """Per-step marginal gains oracle: RAW part-sums (no normalization),
+    −inf at invalid candidates.
+
+    Feature rules: ground (N, D), row (N,) state; bitmap rules: ground is
+    ignored, row (W,) covered words, cands (C, W)."""
+    mat = pairwise(ground, cands, rule)                  # (N|W, C)
+    raw = jnp.sum(R.gain_part(row[:, None], mat, rule), axis=0)
+    return jnp.where(cand_valid, raw, -jnp.inf)
+
+
 def fused_step(mat: jax.Array, row: jax.Array, mask: jax.Array,
-               prev: jax.Array, mode: str = "min"):
+               prev: jax.Array, rule: KernelRule):
     """Oracle for the fused selection step over a cached (N, C) matrix.
 
-    Applies the deferred previous-winner column update to the state row
-    (mind for 'min'/k-medoid, curmax for 'max'/facility), then computes the
-    masked relu-sum gains and their argmax. Returns (new_row, best () i32,
-    best_gain () f32); best_gain is the RAW relu sum (no 1/N)."""
-    m = mat.astype(F32)                # bf16 cache storage, f32 accumulate
-    col = jax.lax.dynamic_slice_in_dim(m, jnp.maximum(prev, 0), 1,
+    Applies the deferred previous-winner column update to the state row,
+    then computes the masked gain sums and their argmax. Returns
+    (new_row, best () i32, best_gain () f32); best_gain is the RAW part
+    sum (no 1/N)."""
+    col = jax.lax.dynamic_slice_in_dim(mat, jnp.maximum(prev, 0), 1,
                                        axis=1)[:, 0]
-    if mode == "min":
-        upd = jnp.minimum(row, col)
-    else:
-        upd = jnp.maximum(row, col)
-    new_row = jnp.where(prev >= 0, upd, row)
-    part = (jnp.maximum(new_row[:, None] - m, 0.0) if mode == "min"
-            else jnp.maximum(m - new_row[:, None], 0.0))
-    gains = jnp.where(mask > 0, jnp.sum(part, axis=0), -jnp.inf)
-    best = jnp.argmax(gains).astype(jnp.int32)
-    return new_row, best, gains[best]
+    new_row = R.fold_winner(row, col, prev, rule)
+    part = R.gain_part(new_row[:, None], mat, rule)
+    gains_ = jnp.where(mask > 0, jnp.sum(part, axis=0), -jnp.inf)
+    best = jnp.argmax(gains_).astype(jnp.int32)
+    return new_row, best, gains_[best]
 
 
 def greedy_loop(mat: jax.Array, row: jax.Array, mask: jax.Array, k: int,
-                mode: str = "min"):
+                rule: KernelRule):
     """Oracle for the whole-greedy megakernel (kernels/greedy_loop.py): all
     k selection steps over a cached (N, C) matrix, including the per-step
     accept rule (gain > 0), mask update, and the final winner-column flush.
 
     Returns (final_row (N,), bests (k,) i32 with −1 for rejected steps,
-    gains (k,) f32 raw relu sums)."""
+    gains (k,) f32 raw part sums)."""
     c = mat.shape[1]
     cols = jnp.arange(c, dtype=jnp.int32)
 
     def step(carry, _):
         row, mask, prev = carry
-        new_row, best, gain = fused_step(mat, row, mask, prev, mode=mode)
+        new_row, best, gain = fused_step(mat, row, mask, prev, rule)
         accept = jnp.isfinite(gain) & (gain > 0)
         best_i = jnp.where(accept, best, jnp.int32(-1))
         mask = jnp.where(accept & (cols == best), 0.0, mask)
         return (new_row, mask, best_i), (best_i, gain)
 
-    (row, _, prev), (bests, gains) = jax.lax.scan(
-        step, (row.astype(F32), mask.astype(F32), jnp.int32(-1)), None,
-        length=k)
-    col = jax.lax.dynamic_slice_in_dim(mat.astype(F32),
-                                       jnp.maximum(prev, 0), 1, axis=1)[:, 0]
-    upd = jnp.minimum(row, col) if mode == "min" else jnp.maximum(row, col)
-    return jnp.where(prev >= 0, upd, row), bests, gains
+    (row, _, prev), (bests, gains_) = jax.lax.scan(
+        step, (row, mask.astype(F32), jnp.int32(-1)), None, length=k)
+    col = jax.lax.dynamic_slice_in_dim(mat, jnp.maximum(prev, 0), 1,
+                                       axis=1)[:, 0]
+    return R.fold_winner(row, col, prev, rule), bests, gains_
 
 
-def sieve_admit(gains, values, counts, vgrid, ok, k: int):
+def sieve_admit(gains_, values, counts, vgrid, ok, k: int):
     """Sieve-Streaming admission rule (Badanidiyuru et al. 2014), shared
-    by the Pallas stream-filter kernel and both jnp oracles so the
+    by the Pallas stream-filter kernel and the jnp oracle so the
     threshold semantics can never drift between them: admit when |S_l| < k
     and the raw gain clears (v_l/2 − f(S_l))/(k − |S_l|). The `gain > 0`
     conjunct only skips zero-gain fills after f(S_l) has already reached
@@ -131,7 +105,7 @@ def sieve_admit(gains, values, counts, vgrid, ok, k: int):
     Shapes broadcast; all raw units."""
     remaining = jnp.maximum(k - counts, 1).astype(F32)
     thresh = (vgrid * 0.5 - values) / remaining
-    return ok & (counts < k) & (gains >= thresh) & (gains > 0.0)
+    return ok & (counts < k) & (gains_ >= thresh) & (gains_ > 0.0)
 
 
 def sieve_reanchor(singletons, bvalid, rows, row0, values, counts, expos,
@@ -175,46 +149,41 @@ def sieve_reanchor(singletons, bvalid, rows, row0, values, counts, expos,
 def stream_sieve(mat: jax.Array, row0: jax.Array, rows: jax.Array,
                  values: jax.Array, counts: jax.Array, expos: jax.Array,
                  m_max: jax.Array, bvalid: jax.Array, k: int,
-                 eps_log: float, mode: str = "min"):
+                 eps_log: float, rule: KernelRule):
     """Oracle for the batched sieve-streaming kernel
     (kernels/stream_filter.py, DESIGN §Streaming): re-anchor the exponent
     window on the batch's singleton gains, then admit arrivals IN ORDER
     (admitting arrival b changes the state arrival b+1 sees — the
     sequential semantics the kernel must reproduce bit-identically).
 
-    mat: (N, B) ground×arrival distance/similarity matrix; row0: (N,)
-    empty-solution state row; rows: (L, N) per-level state (mind for
-    'min'/k-medoid, curmax for 'max'/facility); values: (L,) RAW f(S_l)
-    (relu-sum units, no 1/N); counts: (L,) i32; expos: (L,) i32 grid
-    exponents (v_l = e^(expos·eps_log)); m_max: () running max singleton.
+    mat: (N, B) ground×arrival matrix (W words × B bitmaps for 'bits');
+    row0: (N,) empty-solution state row; rows: (L, N) per-level state;
+    values: (L,) RAW f(S_v) (part-sum/popcount units, no 1/N); counts:
+    (L,) i32; expos: (L,) i32 grid exponents (v_l = e^(expos·eps_log));
+    m_max: () running max singleton.
 
     Returns (rows (L, N), values (L,), counts (L,), admits (L, B) f32
     0/1, expos (L,), m_new (), expired (L,) f32 0/1).
     """
-    m = mat.astype(F32)
     l, b = rows.shape[0], mat.shape[1]
-    part0 = (jnp.maximum(row0[:, None] - m, 0.0) if mode == "min"
-             else jnp.maximum(m - row0[:, None], 0.0))     # (N, B)
+    part0 = R.gain_part(row0[:, None], mat, rule)          # (N, B)
     singletons = jnp.sum(part0, axis=0, keepdims=True)     # (1, B)
     rows, values, counts, expos, m_new, expired = sieve_reanchor(
-        singletons, bvalid.astype(F32).reshape(1, b), rows.astype(F32),
-        row0.astype(F32).reshape(1, -1), values.astype(F32).reshape(l, 1),
+        singletons, bvalid.astype(F32).reshape(1, b), rows,
+        row0.reshape(1, -1), values.astype(F32).reshape(l, 1),
         counts.reshape(l, 1), expos.reshape(l, 1).astype(jnp.int32),
         m_max.astype(F32), eps_log)
     vgrid = jnp.exp(expos.astype(F32) * eps_log)           # (L, 1)
 
     def body(i, carry):
         rows, values, counts, admits = carry
-        col = jax.lax.dynamic_slice_in_dim(m, i, 1, axis=1)[:, 0]  # (N,)
-        part = (jnp.maximum(rows - col[None, :], 0.0) if mode == "min"
-                else jnp.maximum(col[None, :] - rows, 0.0))        # (L, N)
-        gains = jnp.sum(part, axis=1, keepdims=True)               # (L, 1)
+        col = jax.lax.dynamic_slice_in_dim(mat, i, 1, axis=1).T  # (1, N)
+        gains_ = R.level_gains(rows, col, rule)                  # (L, 1)
         ok = jax.lax.dynamic_index_in_dim(bvalid, i, keepdims=False) > 0
-        admit = sieve_admit(gains, values, counts, vgrid, ok, k)
-        upd = (jnp.minimum(rows, col[None, :]) if mode == "min"
-               else jnp.maximum(rows, col[None, :]))
+        admit = sieve_admit(gains_, values, counts, vgrid, ok, k)
+        upd = R.fold_cols(rows, col, rule)
         rows = jnp.where(admit, upd, rows)
-        values = values + jnp.where(admit, gains, 0.0)
+        values = values + jnp.where(admit, gains_, 0.0)
         counts = counts + admit.astype(jnp.int32)
         admits = jax.lax.dynamic_update_slice_in_dim(
             admits, admit.astype(F32), i, axis=1)
@@ -224,59 +193,3 @@ def stream_sieve(mat: jax.Array, row0: jax.Array, rows: jax.Array,
         0, b, body, (rows, values, counts, jnp.zeros((l, b), F32)))
     return (rows, values[:, 0], counts[:, 0], admits, expos[:, 0],
             m_new, expired.astype(F32)[:, 0])
-
-
-def stream_sieve_cover(bits: jax.Array, covered: jax.Array,
-                       values: jax.Array, counts: jax.Array,
-                       expos: jax.Array, m_max: jax.Array,
-                       bvalid: jax.Array, k: int, eps_log: float):
-    """Coverage twin of `stream_sieve` over packed uint32 bitmaps.
-
-    bits: (B, W) arrival coverage bitmaps; covered: (L, W) per-level
-    covered sets; singleton gain = popcount(bits[b]), gain(l, b) =
-    popcount(bits[b] & ~covered[l]). Returns as stream_sieve.
-    """
-    l, b = covered.shape[0], bits.shape[0]
-    singletons = jnp.sum(jax.lax.population_count(bits)
-                         .astype(jnp.int32), axis=1,
-                         keepdims=True).astype(F32).T          # (1, B)
-    row0 = jnp.zeros((1, covered.shape[1]), covered.dtype)
-    covered, values, counts, expos, m_new, expired = sieve_reanchor(
-        singletons, bvalid.astype(F32).reshape(1, b), covered, row0,
-        values.astype(F32).reshape(l, 1), counts.reshape(l, 1),
-        expos.reshape(l, 1).astype(jnp.int32), m_max.astype(F32), eps_log)
-    vgrid = jnp.exp(expos.astype(F32) * eps_log)
-
-    def body(i, carry):
-        covered, values, counts, admits = carry
-        word = jax.lax.dynamic_slice_in_dim(bits, i, 1, axis=0)    # (1, W)
-        new = jnp.bitwise_and(word, jnp.bitwise_not(covered))      # (L, W)
-        gains = jnp.sum(jax.lax.population_count(new).astype(jnp.int32),
-                        axis=1, keepdims=True).astype(F32)         # (L, 1)
-        ok = jax.lax.dynamic_index_in_dim(bvalid, i, keepdims=False) > 0
-        admit = sieve_admit(gains, values, counts, vgrid, ok, k)
-        covered = jnp.where(admit, jnp.bitwise_or(covered, word), covered)
-        values = values + jnp.where(admit, gains, 0.0)
-        counts = counts + admit.astype(jnp.int32)
-        admits = jax.lax.dynamic_update_slice_in_dim(
-            admits, admit.astype(F32), i, axis=1)
-        return covered, values, counts, admits
-
-    covered, values, counts, admits = jax.lax.fori_loop(
-        0, b, body, (covered, values, counts, jnp.zeros((l, b), F32)))
-    return (covered, values[:, 0], counts[:, 0], admits, expos[:, 0],
-            m_new, expired.astype(F32)[:, 0])
-
-
-def kmedoid_update(ground: jax.Array, mind: jax.Array, chosen: jax.Array
-                   ) -> jax.Array:
-    """New per-ground-element min distance after adding `chosen` (D,)."""
-    d = jnp.sqrt(jnp.maximum(jnp.sum(
-        (ground.astype(F32) - chosen.astype(F32)[None, :]) ** 2, -1), 0.0))
-    return jnp.minimum(mind, d)
-
-
-def facility_update(ground: jax.Array, curmax: jax.Array, chosen: jax.Array
-                    ) -> jax.Array:
-    sim = ground.astype(F32) @ chosen.astype(F32)
-    return jnp.maximum(curmax, sim)

@@ -1,0 +1,253 @@
+"""Declarative kernel rules — the ONE place objective math lives.
+
+Every submodular objective in this repo reduces to the same selection
+algebra over a ground×candidate interaction matrix M and a per-ground-row
+state vector r:
+
+    matrix    M[x, c]  = pairwise(x, c)         'dist' | 'dot' | 'bits'
+    state     r_x      = fold_{v ∈ S} M[x, v]   'min' | 'max' | 'or' | 'satsum'
+    gain(c|S)          = Σ_x part(r_x, M[x, c])  the objective's marginal
+
+A `KernelRule` captures exactly that triple (plus the row dtype/pad and
+any static parameters like the saturation cap), and EVERY engine tier —
+per-step gains kernel, fused cached-matrix step, whole-greedy megakernel
+(streaming and resident), sieve stream-filter, and the jnp oracles —
+consumes the rule through the shared primitives below instead of carrying
+per-objective kernels or mode strings. Adding an objective therefore
+means registering one rule (and, only for a genuinely new fold algebra,
+one branch in `gain_part`/`fold_cols`); no new kernel files.
+
+Built-in rules (DESIGN §Objective protocol):
+
+    name        pairwise  fold     row        part(r, m)
+    ---------   --------  ------   --------   --------------------------
+    kmedoid     dist      min      f32 mind   relu(r − m)
+    facility    dot       max      f32 curmax relu(m − r)
+    coverage    bits      or       u32 words  popcount(m & ~r)
+    satcover    dot       satsum   f32 cursum min(relu(m), cap − r)
+
+'bits' needs no pairwise compute at all: the candidate payloads ARE the
+matrix columns (M[:, c] = bitmap of c, transposed to words-major), which
+is why coverage rides every cached-matrix tier for free — `prepare` is a
+transpose, not a kernel dispatch.
+
+All primitives are pure jnp on values (not refs), so they trace inside
+Pallas kernel bodies and in the oracles identically — semantics cannot
+drift between backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+# facility/satsum pad sentinel for invalid ground rows (≈ f32 max; keeps
+# the per-element gain part at exactly 0)
+BIG = 3.0e38
+
+_NEG_INF = float("-inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelRule:
+    """Static, hashable spec of one objective's kernel math. Frozen so it
+    can be a jit/pallas static argument: equal rules hit the same compile
+    cache entry."""
+    name: str            # registry key (and the jit cache key)
+    pairwise: str        # 'dist' | 'dot' | 'bits'
+    fold: str            # 'min' | 'max' | 'or' | 'satsum'
+    row_dtype: str       # 'float32' | 'uint32'
+    row_pad: float       # pad value for ground-axis padding (0 gain)
+    cap: float = 0.0     # saturation cap (satsum fold only)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.row_dtype)
+
+    @property
+    def is_bitmap(self) -> bool:
+        return self.pairwise == "bits"
+
+    def pad_row(self, dtype=None):
+        return jnp.asarray(self.row_pad, dtype or self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# built-in rules + registry
+# ---------------------------------------------------------------------------
+
+DIST_MIN = KernelRule("kmedoid", "dist", "min", "float32", 0.0)
+DOT_MAX = KernelRule("facility", "dot", "max", "float32", BIG)
+BITS_OR = KernelRule("coverage", "bits", "or", "uint32", 0.0)
+
+_RULES = {r.name: r for r in (DIST_MIN, DOT_MAX, BITS_OR)}
+
+
+@functools.lru_cache(maxsize=None)
+def sat_sum(cap: float, name: str = "satcover") -> KernelRule:
+    """Saturated-sum rule family: f(S) = Σ_x min(cap, Σ_{v∈S} relu⟨x, v⟩)
+    — weighted saturated coverage over embedding similarities (Lin &
+    Bilmes-style), monotone submodular because min(cap, ·) is concave
+    nondecreasing over a nonnegative modular sum. Invalid ground rows pad
+    at `cap` so their per-element part is exactly 0. lru_cached so equal
+    caps share one jit compile-cache identity."""
+    assert cap > 0.0, "satsum needs a positive saturation cap"
+    return KernelRule(name, "dot", "satsum", "float32", float(cap),
+                      cap=float(cap))
+
+
+def get(name: str) -> KernelRule:
+    """Look up a built-in rule by objective name."""
+    return _RULES[name]
+
+
+# ---------------------------------------------------------------------------
+# the shared selection algebra
+# ---------------------------------------------------------------------------
+
+
+def gain_part(row, m, rule: KernelRule):
+    """Per-element marginal-gain contribution part(r, M), broadcast over
+    any (ground-axis, candidate-axis) orientation: row is the state along
+    the ground axis, m the matrix slab. Returns f32 ≥ 0. The three call
+    shapes in the engines:
+
+      fused/loop kernels: row (1, BN).T × m (BN, C)   → (BN, C)
+      sieve level gains:  row (L, N)    × m (1, N)    → (L, N)
+      per-step gains:     row (N, 1)    × m (N, C)    → (N, C)
+    """
+    if rule.fold == "min":
+        return jnp.maximum(row - m.astype(F32), 0.0)
+    if rule.fold == "max":
+        return jnp.maximum(m.astype(F32) - row, 0.0)
+    if rule.fold == "satsum":
+        return jnp.minimum(jnp.maximum(m.astype(F32), 0.0), rule.cap - row)
+    if rule.fold == "or":
+        new = jnp.bitwise_and(m, jnp.bitwise_not(row))
+        return jax.lax.population_count(new).astype(F32)
+    raise KeyError(rule.fold)
+
+
+def fold_cols(row, col, rule: KernelRule):
+    """State-row fold: absorb one matrix column (an accepted element)."""
+    if rule.fold == "min":
+        return jnp.minimum(row, col.astype(F32))
+    if rule.fold == "max":
+        return jnp.maximum(row, col.astype(F32))
+    if rule.fold == "satsum":
+        return jnp.minimum(row + jnp.maximum(col.astype(F32), 0.0),
+                           rule.cap)
+    if rule.fold == "or":
+        return jnp.bitwise_or(row, col)
+    raise KeyError(rule.fold)
+
+
+def fold_winner(row, col, prev, rule: KernelRule):
+    """Deferred update: fold the previous winner's column into the state
+    row; prev < 0 (no accepted winner yet) is a no-op."""
+    return jnp.where(prev >= 0, fold_cols(row, col, rule), row)
+
+
+def partial_gains(row, m, rule: KernelRule):
+    """(1, BN) state row × (BN, C) matrix block → (1, C) gain partials."""
+    return jnp.sum(gain_part(row.T, m, rule), axis=0, keepdims=True)
+
+
+def level_gains(rows, col, rule: KernelRule):
+    """(L, N) per-level state rows × (1, N) arrival column → (L, 1) raw
+    gains — the level-batched transpose of `partial_gains` (sieve)."""
+    return jnp.sum(gain_part(rows, col, rule), axis=1, keepdims=True)
+
+
+def masked_argmax(gains, mask):
+    """(1, C) gains + 0/1 mask → (first argmax () i32, max gain () f32)."""
+    g = jnp.where(mask > 0, gains, _NEG_INF)
+    mx = jnp.max(g)
+    cols = jax.lax.broadcasted_iota(jnp.int32, g.shape, 1)
+    first = jnp.min(jnp.where(g == mx, cols, jnp.int32(2 ** 30)))
+    return first, mx
+
+
+# ---------------------------------------------------------------------------
+# matrix construction
+# ---------------------------------------------------------------------------
+
+
+def pairwise_block(g, c, mode: str):
+    """(TN, D) × (TC, D) feature blocks → (TN, TC) matrix block, f32.
+
+    The single source of the ‖g‖²+‖c‖²−2⟨g,c⟩ expansion — shared by the
+    pairwise kernel, the resident megakernel, and the stream filter so
+    every engine sees bit-identical matrix entries."""
+    cross = jax.lax.dot_general(g, c, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32)   # (TN, TC)
+    if mode == "dot":
+        return cross
+    gn = jnp.sum(g * g, axis=1, keepdims=True)         # (TN, 1)
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T       # (1, TC)
+    return jnp.sqrt(jnp.maximum(gn + cn - 2.0 * cross, 0.0))
+
+
+def matrix_block(g, c, rule: KernelRule):
+    """On-chip matrix slab in ground-major (N|W, C) orientation. For
+    'bits' the candidate bitmaps ARE the columns — one transpose, no
+    arithmetic; for the feature rules, one MXU matmul."""
+    if rule.is_bitmap:
+        return c.T                                     # (W, C) uint32
+    return pairwise_block(g.astype(F32), c.astype(F32), rule.pairwise)
+
+
+def block_gains(g, cands, row, rule: KernelRule):
+    """Per-step gains kernel body: one (candidate-block × ground-block)
+    partial-gain slab → (1, TC) f32. For 'bits', cands-major layout
+    avoids the block transpose: part works elementwise either way."""
+    if rule.is_bitmap:
+        part = gain_part(row, cands, rule)             # (TC, TW)
+        return jnp.sum(part, axis=1, keepdims=True).T  # (1, TC)
+    m = matrix_block(g, cands, rule)                   # (TN, TC)
+    return partial_gains(row, m, rule)
+
+
+# ---------------------------------------------------------------------------
+# per-step (uncached) state math — the memory-capped path + oracles
+# ---------------------------------------------------------------------------
+
+
+def pairwise_col(ground, payload, rule: KernelRule):
+    """One candidate's matrix column M[:, c] against the ground set,
+    pure jnp. For 'bits' the payload IS the column."""
+    if rule.is_bitmap:
+        return payload
+    g = ground.astype(F32)
+    p = payload.astype(F32)
+    if rule.pairwise == "dist":
+        return jnp.sqrt(jnp.maximum(
+            jnp.sum((g - p[None, :]) ** 2, axis=-1), 0.0))
+    col = g @ p                                        # 'dot' family
+    return col
+
+
+def update_row(ground, row, payload, rule: KernelRule):
+    """Per-step state update after accepting `payload` (the slow,
+    recompute-everything path and the oracles)."""
+    return fold_cols(row, pairwise_col(ground, payload, rule), rule)
+
+
+def empty_row(ground, ground_valid, rule: KernelRule, words: int = 0):
+    """State row of the EMPTY solution: the fold identity per ground row,
+    with invalid rows pinned at the zero-gain pad value.
+
+    'min' uses the paper's auxiliary element e0 = 0 (k-medoid §6.4), so
+    the empty row is d(·, e0) = ‖x‖; 'bits' rows are all-clear words and
+    need no ground features at all."""
+    if rule.is_bitmap:
+        return jnp.zeros((words,), jnp.uint32)
+    if rule.fold == "min":
+        d0 = jnp.linalg.norm(ground.astype(F32), axis=-1)
+        return jnp.where(ground_valid, d0, rule.pad_row())
+    zero = jnp.zeros((ground.shape[0],), F32)
+    return jnp.where(ground_valid, zero, rule.pad_row())

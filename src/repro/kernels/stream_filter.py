@@ -8,32 +8,32 @@ expired levels, and (b) decide which levels admit each arrival. Done
 naively that is a separate singleton-gains pass plus B×L `gains` calls;
 this kernel does the whole batch in ONE dispatch:
 
-    1. build the (N, B) ground×arrival matrix ON-CHIP with one MXU matmul
-       (`pairwise_block`, the same primitive the resident megakernel
-       uses) — it serves BOTH the singleton gains and the admission loop;
+    1. build the (N, B) ground×arrival matrix ON-CHIP via the rule's
+       pairwise op (`rules.matrix_block` — one MXU matmul for the feature
+       rules, a bitmap transpose for coverage, N = W words) — it serves
+       BOTH the singleton gains and the admission loop;
     2. re-anchor: (1, B) raw singleton gains vs the empty-solution row,
        then the shared `ref.sieve_reanchor` window slide (expired levels
        reset to row0 in place);
     3. `fori_loop` over the B arrivals IN ORDER (admission is sequential:
        an admitted arrival changes the state later arrivals see). Each
-       iteration computes the (L, 1) raw relu-sum gains of the arrival
-       against every level's state row — the level-batched transpose of
-       `fused_step.partial_gains` — and applies the shared
-       `ref.sieve_admit` threshold rule plus the masked fold;
+       iteration computes the (L, 1) raw gains of the arrival against
+       every level's state row — `rules.level_gains`, the level-batched
+       transpose of `rules.partial_gains` — and applies the shared
+       `ref.sieve_admit` threshold rule plus the rule's fold;
     4. emit updated (L, N) rows, raw values, counts, exponents, m, the
        (L, 1) expired mask, and the (L, B) 0/1 admit matrix (the host
        wrapper resets expired id/payload slots and scatters admits).
 
 The admission and re-anchor rules are IMPORTED from kernels/ref.py (pure
-jnp), so kernel and oracle semantics cannot drift; parity is asserted
-bit-identically under interpret mode. Everything lives in VMEM for the
-whole dispatch; the ops.stream_plan gate falls back to the jnp oracle
-(ref.stream_sieve) when the working set exceeds the VMEM budget.
+jnp) and the objective math from kernels/rules.py, so kernel and oracle
+semantics cannot drift; parity is asserted bit-identically under
+interpret mode. Everything lives in VMEM for the whole dispatch; the
+plans.stream_plan gate falls back to the jnp oracle (ref.stream_sieve)
+when the working set exceeds the VMEM budget.
 
-Modes mirror fused_step: 'min' (k-medoid: rows are mind, gain =
-relu(mind − d)) and 'max' (facility: rows are curmax, gain =
-relu(s − curmax)). Gains/values/v-grid are RAW relu sums — callers
-normalize by the valid ground count.
+Gains/values/v-grid are RAW part sums — callers normalize by the valid
+ground count.
 """
 from __future__ import annotations
 
@@ -43,36 +43,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.pairwise import pairwise_block
+from repro.kernels import rules as R
+from repro.kernels.rules import KernelRule, level_gains  # noqa: F401
 from repro.kernels.ref import sieve_admit, sieve_reanchor
 
 F32 = jnp.float32
-
-
-def level_gains(rows, col, mode: str):
-    """(L, N) per-level state rows × (1, N) arrival column → (L, 1) raw
-    gains — the level-batched transpose of fused_step.partial_gains."""
-    part = (jnp.maximum(rows - col, 0.0) if mode == "min"
-            else jnp.maximum(col - rows, 0.0))            # (L, N)
-    return jnp.sum(part, axis=1, keepdims=True)
 
 
 def _kernel(ground_ref, batch_ref, rows_ref, row0_ref, values_ref,
             counts_ref, expos_ref, m_ref, bvalid_ref,
             rowsout_ref, valout_ref, cntout_ref, admit_ref, expoout_ref,
             mout_ref, expired_ref, *,
-            k: int, eps_log: float, pw_mode: str, mode: str):
-    g = ground_ref[...].astype(F32)                       # (N, D)
-    bt = batch_ref[...].astype(F32)                       # (B, D)
-    mat = pairwise_block(g, bt, pw_mode)                  # (N, B), on-chip
-    row0 = row0_ref[...].astype(F32)                      # (1, N)
+            k: int, eps_log: float, rule: KernelRule):
+    bt = batch_ref[...]                                   # (B, D) | (B, W)
+    mat = R.matrix_block(ground_ref[...], bt, rule)       # (N, B), on-chip
+    row0 = row0_ref[...]                                  # (1, N)
     bv = bvalid_ref[...].astype(F32)                      # (1, B)
     nb = bt.shape[0]
 
     # re-anchor on this batch's singleton gains (vs the empty solution)
-    singletons = level_gains(row0, mat.T, mode).T         # (1, B)
+    singletons = R.level_gains(row0, mat.T, rule).T       # (1, B)
     rows, values, counts, expos, m_new, expired = sieve_reanchor(
-        singletons, bv, rows_ref[...].astype(F32), row0,
+        singletons, bv, rows_ref[...], row0,
         values_ref[...].astype(F32), counts_ref[...],
         expos_ref[...], m_ref[0, 0], eps_log)
     vgrid = jnp.exp(expos.astype(F32) * eps_log)          # (L, 1)
@@ -81,11 +73,10 @@ def _kernel(ground_ref, batch_ref, rows_ref, row0_ref, values_ref,
         rows, values, counts, admits = carry
         col = jax.lax.dynamic_slice(mat, (0, i),
                                     (mat.shape[0], 1)).T  # (1, N)
-        gains = level_gains(rows, col, mode)              # (L, 1)
+        gains = R.level_gains(rows, col, rule)            # (L, 1)
         ok = jax.lax.dynamic_slice(bv, (0, i), (1, 1))[0, 0] > 0
         admit = sieve_admit(gains, values, counts, vgrid, ok, k)
-        upd = (jnp.minimum(rows, col) if mode == "min"
-               else jnp.maximum(rows, col))
+        upd = R.fold_cols(rows, col, rule)
         rows = jnp.where(admit, upd, rows)
         values = values + jnp.where(admit, gains, 0.0)
         counts = counts + admit.astype(jnp.int32)
@@ -104,37 +95,39 @@ def _kernel(ground_ref, batch_ref, rows_ref, row0_ref, values_ref,
     expired_ref[...] = expired.astype(F32)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "eps_log", "pw_mode",
-                                             "mode", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "eps_log", "rule",
+                                             "interpret"))
 def stream_filter_pallas(ground: jax.Array, batch: jax.Array,
                          rows: jax.Array, row0: jax.Array,
                          values: jax.Array, counts: jax.Array,
                          expos: jax.Array, m_max: jax.Array,
                          bvalid: jax.Array, k: int, eps_log: float,
-                         pw_mode: str = "dist", mode: str = "min",
-                         interpret: bool = False):
-    """ground: (N, D), batch: (B, D) arrivals, rows: (L, N) level states,
-    row0: (1, N) empty-solution row, values: (L, 1) f32 raw, counts /
-    expos: (L, 1) i32, m_max: (1, 1) f32, bvalid: (1, B) 0/1 f32. L must
-    be a sublane multiple (SieveStreamer rounds its level count up);
-    N/B/D padded by the ops.py wrapper (arrival pads carry bvalid = 0).
+                         rule: KernelRule, interpret: bool = False):
+    """Feature rules: ground (N, D), batch (B, D) arrivals. Bitmap rules:
+    ground is an ignored placeholder and batch the (B, W) arrival bitmaps
+    (N = W). rows: (L, N) level states in the rule's row dtype, row0:
+    (1, N) empty-solution row, values: (L, 1) f32 raw, counts / expos:
+    (L, 1) i32, m_max: (1, 1) f32, bvalid: (1, B) 0/1 f32. L must be a
+    sublane multiple (SieveStreamer rounds its level count up); N/B/D
+    padded by the ops.py wrapper (arrival pads carry bvalid = 0).
 
     Returns (rows (L, N), values (L, 1), counts (L, 1) i32, admits
     (L, B) f32 0/1, expos (L, 1) i32, m_new (1, 1) f32, expired (L, 1)
     f32 0/1) — ONE dispatch per arrival batch, re-anchor included.
     """
-    n, d = ground.shape
     nb = batch.shape[0]
-    l = rows.shape[0]
-    assert batch.shape[1] == d and rows.shape == (l, n)
+    l, n = rows.shape
+    if rule.is_bitmap:
+        assert batch.shape[1] == n, (batch.shape, n)
+    else:
+        assert ground.shape == (n, batch.shape[1])
     assert row0.shape == (1, n) and values.shape == (l, 1)
     assert counts.shape == (l, 1) and expos.shape == (l, 1)
     assert m_max.shape == (1, 1) and bvalid.shape == (1, nb)
     return pl.pallas_call(
-        functools.partial(_kernel, k=k, eps_log=eps_log, pw_mode=pw_mode,
-                          mode=mode),
+        functools.partial(_kernel, k=k, eps_log=eps_log, rule=rule),
         out_shape=[
-            jax.ShapeDtypeStruct((l, n), F32),
+            jax.ShapeDtypeStruct((l, n), rule.dtype),
             jax.ShapeDtypeStruct((l, 1), F32),
             jax.ShapeDtypeStruct((l, 1), jnp.int32),
             jax.ShapeDtypeStruct((l, nb), F32),

@@ -103,7 +103,9 @@ def stream_select_continuous(objective, stream: Iterable, k: int, *,
                              ground: Optional[jax.Array] = None,
                              ground_valid: Optional[jax.Array] = None,
                              backend: Optional[str] = None,
-                             node_engine: str = "auto"
+                             node_engine: str = "auto",
+                             sample_level: int = 0,
+                             seed: Optional[int] = None
                              ) -> Tuple[Solution, dict]:
     """Continuous mode with `lanes` vmapped lanes (the single-device
     simulation of the mesh — core.simulate style). Returns the final
@@ -119,6 +121,9 @@ def stream_select_continuous(objective, stream: Iterable, k: int, *,
     rounds the shard_map driver runs — executed under nested vmap axes
     (one named axis per tree level), so continuous and distributed modes
     cannot drift semantically. ``lanes`` must equal branching^levels.
+    ``sample_level``/``seed`` enable reseedable stochastic greedy at the
+    merge nodes (threaded to accumulate_levels; seed None keeps the
+    legacy fixed tape).
     """
     streamer = SieveStreamer(objective, k, eps, ground=ground,
                              ground_valid=ground_valid, backend=backend)
@@ -143,8 +148,9 @@ def stream_select_continuous(objective, stream: Iterable, k: int, *,
         def fn(sol):
             return accumulate_levels(objective, sol, k, axes, radices,
                                      aug_levels=aug_levels,
+                                     sample_level=sample_level,
                                      node_engine=node_engine,
-                                     carry_prev=merged)
+                                     carry_prev=merged, seed=seed)
 
         f = fn
         for ax in axes:        # innermost level = innermost vmap
@@ -196,12 +202,16 @@ def stream_select_distributed(objective, stream: Iterable, k: int, mesh,
                               ground: Optional[jax.Array] = None,
                               ground_valid: Optional[jax.Array] = None,
                               backend: Optional[str] = None,
-                              node_engine: str = "auto"
+                              node_engine: str = "auto",
+                              sample_level: int = 0,
+                              seed: Optional[int] = None
                               ) -> Tuple[Solution, dict]:
     """Continuous mode over a real mesh: each lane sieves its shard of
     every arrival batch, and merge rounds run the exact
     core.greedyml.accumulate_levels recurrence (sieve-as-leaf-solver)
-    with the last merged solution carried as an extra competitor."""
+    with the last merged solution carried as an extra competitor.
+    ``sample_level``/``seed`` reseed the merge nodes' stochastic draws
+    (seed None keeps the legacy fixed tape)."""
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
@@ -218,7 +228,7 @@ def stream_select_distributed(objective, stream: Iterable, k: int, mesh,
         return jax.tree.map(lambda x: x[None], state1)
 
     aug_levels = None
-    if streamer.kind == "vector":
+    if not streamer.rule.is_bitmap:
         aug_levels = jnp.broadcast_to(
             streamer.ground[None], (len(tree_axes),) + streamer.ground.shape)
 
@@ -226,7 +236,9 @@ def stream_select_distributed(objective, stream: Iterable, k: int, mesh,
         sol = streamer.solution(jax.tree.map(lambda x: x[0], state))
         out = accumulate_levels(objective, sol, k, tree_axes, radices,
                                 aug_levels=aug_levels,
-                                node_engine=node_engine, carry_prev=carry)
+                                sample_level=sample_level,
+                                node_engine=node_engine, carry_prev=carry,
+                                seed=seed)
         return _broadcast_from_root(out, tree_axes, radices)
 
     step = shard_map(step_fn, mesh=mesh,

@@ -23,14 +23,17 @@ the bound.
 
 Per-level partial solutions live in (L, k) id / (L, k, …) payload slots
 with counts giving validity — the same fixed-shape Solution convention as
-core.greedy. For the vector objectives (k-medoid / facility) the per-level
-state is an (L, N) stack of mind/curmax rows over a FIXED evaluation
-ground set (the 'query set' the stream is summarized against — the
-streaming analogue of the paper's §6.4 local objective); one arrival batch
-against all L levels is ONE Pallas dispatch (kernels/stream_filter.py,
-gated by ops.stream_plan). Coverage keeps (L, W) packed bitmaps and runs
-the jnp twin (ref.stream_sieve_cover). All values/thresholds are RAW
-(relu-sum / popcount) units; `solution()` normalizes.
+core.greedy. The per-level state is driven entirely by the objective's
+KernelRule (DESIGN §Objective protocol): vector rules keep an (L, N)
+stack of state rows (mind/curmax/cursum) over a FIXED evaluation ground
+set (the 'query set' the stream is summarized against — the streaming
+analogue of the paper's §6.4 local objective); bitmap rules keep (L, W)
+packed covered words and need no ground set. EITHER WAY one arrival
+batch against all L levels is ONE Pallas dispatch
+(kernels/stream_filter.py, gated by ops.stream_plan) — coverage rides
+the same kernel as the vector objectives since the rule refactor. All
+values/thresholds are RAW (part-sum / popcount) units; `solution()`
+normalizes.
 """
 from __future__ import annotations
 
@@ -42,7 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.greedy import Solution
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 F32 = jnp.float32
 
@@ -90,26 +93,24 @@ class SieveStreamer:
                  ground_valid: Optional[jax.Array] = None,
                  backend: Optional[str] = None):
         self.objective = objective
+        self.rule = objective.rule
         self.k = int(k)
         self.eps = float(eps)
         self.eps_log = math.log1p(float(eps))
         self.backend = backend
         self.levels = num_levels(k, eps)
-        self.kind = "cover" if objective.name == "coverage" else "vector"
-        if self.kind == "vector":
+        if self.rule.is_bitmap:
+            self.ground = None
+            state0 = objective.init_state(None, None)
+        else:
             assert ground is not None, \
                 "vector objectives need a fixed evaluation ground set"
             if ground_valid is None:
                 ground_valid = jnp.ones((ground.shape[0],), bool)
             state0 = objective.init_state(ground, ground_valid)
             self.ground = state0.ground
-            self.n_eff = state0.n_eff
-            if objective.name == "kmedoid":
-                self.mode, self.pw_mode = "min", "dist"
-                self.row0 = state0.mind
-            else:
-                self.mode, self.pw_mode = "max", "dot"
-                self.row0 = state0.curmax
+        self.n_eff = state0.n_eff
+        self.row0 = state0.row
 
     # -- state construction --------------------------------------------------
 
@@ -120,12 +121,11 @@ class SieveStreamer:
         can also be constructed without any stream in hand (checkpoint
         restore builds its example tree this way)."""
         L, k = self.levels, self.k
-        if self.kind == "vector":
-            rows = jnp.tile(self.row0[None, :], (L, 1))
-            tail, dtype = (self.ground.shape[1],), self.ground.dtype
-        else:
-            rows = jnp.zeros((L, self.objective.words), jnp.uint32)
+        rows = jnp.tile(self.row0[None, :], (L, 1))
+        if self.rule.is_bitmap:
             tail, dtype = (self.objective.words,), jnp.uint32
+        else:
+            tail, dtype = (self.ground.shape[1],), self.ground.dtype
         if payload_example is not None:
             tail, dtype = payload_example.shape[1:], payload_example.dtype
         pay = jnp.zeros((L, k) + tuple(tail), dtype)
@@ -144,20 +144,12 @@ class SieveStreamer:
         re-anchor (singleton gains + window slide) and the sequential
         admission run in ONE stream-filter dispatch; the host only resets
         expired solution slots and scatters the admits. jit-safe."""
-        if self.kind == "cover":
-            rows, values, counts, admits, expos, m_new, expired = \
-                ref.stream_sieve_cover(
-                    payloads, state.rows, state.values, state.counts,
-                    state.expos, state.m_max, valid.astype(F32), self.k,
-                    self.eps_log)
-            admits, expired = admits > 0, expired > 0
-        else:
-            rows, values, counts, admits, expos, m_new, expired = \
-                ops.stream_filter(
-                    self.ground, payloads, state.rows, self.row0,
-                    state.values, state.counts, state.expos, state.m_max,
-                    valid, self.k, self.eps_log, pw_mode=self.pw_mode,
-                    mode=self.mode, backend=self.backend)
+        rows, values, counts, admits, expos, m_new, expired = \
+            ops.stream_filter(
+                self.ground, payloads, state.rows, self.row0,
+                state.values, state.counts, state.expos, state.m_max,
+                valid, self.k, self.eps_log, self.rule,
+                backend=self.backend)
         # expired levels were restarted inside the dispatch — clear their
         # solution slots before scattering this batch's admits
         exp_col = expired[:, None]
@@ -180,7 +172,7 @@ class SieveStreamer:
         """Best level's partial solution as a fixed-shape core Solution
         (value normalized to the objective's units)."""
         lvl = jnp.argmax(state.values)
-        norm = self.n_eff if self.kind == "vector" else jnp.asarray(1.0, F32)
+        norm = self.n_eff
         slot_valid = (jnp.arange(self.k) < state.counts[lvl])
         return Solution(state.ids[lvl], state.payloads[lvl], slot_valid,
                         state.values[lvl] / norm, state.evals)

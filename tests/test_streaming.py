@@ -42,18 +42,20 @@ def _ids(sol):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("mode,pw", [("min", "dist"), ("max", "dot")])
-def test_stream_filter_interpret_matches_ref(mode, pw):
+@pytest.mark.parametrize("rule_name", ["kmedoid", "facility"])
+def test_stream_filter_interpret_matches_ref(rule_name):
     """The Pallas batch-filter kernel must make bit-identical admit and
     re-anchor decisions to the jnp oracle (and match its states
     numerically) — checked over two chained batches so the second one
     exercises the window slide against a non-trivial m."""
     import math
+    from repro.kernels import rules
+    rule = rules.get(rule_name)
     rng = np.random.default_rng(0)
     n, d, b, l, k = 60, 24, 33, 16, 5
     eps_log = math.log1p(0.1)
     ground = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
-    row0 = (jnp.linalg.norm(ground, axis=1) if mode == "min"
+    row0 = (jnp.linalg.norm(ground, axis=1) if rule.fold == "min"
             else jnp.zeros((n,)))
     batches = [(jnp.asarray((0.5 + i) * rng.normal(size=(b, d))
                             .astype(np.float32)),
@@ -69,8 +71,7 @@ def test_stream_filter_interpret_matches_ref(mode, pw):
             (rows, values, counts, admits, expos, m_max,
              expired) = ops.stream_filter(
                 ground, batch, rows, row0, values, counts, expos, m_max,
-                bvalid, k, eps_log, pw_mode=pw, mode=mode,
-                backend=backend)
+                bvalid, k, eps_log, rule, backend=backend)
         out[backend] = (rows, values, counts, admits, expos, m_max,
                         expired)
     r, it = out["ref"], out["interpret"]
