@@ -48,4 +48,11 @@ REPRO_KERNEL_BACKEND=interpret python -m pytest -q \
     tests/test_streaming.py
 python -m repro.launch.stream --smoke
 
+echo "== fault tolerance (supervised runtime, 8-device mesh) =="
+# level-replay bit-identity, the degraded-tree 0.95x quality band, and a
+# supervised streaming pass — over a real 8-lane host mesh (faultrun sets
+# xla_force_host_platform_device_count before importing jax)
+python -m pytest -q tests/test_fault_tolerance.py
+python -m repro.launch.faultrun --smoke --mesh --lanes 8 --branching 2
+
 echo "CI smoke OK"

@@ -1,11 +1,15 @@
 """Fault-tolerant checkpointing: atomic, sharded-aware, keep-N.
 
 Layout:  <dir>/step_<N>/arrays.npz + manifest.json   (tmp-dir + atomic
-rename so a crash mid-save never corrupts the latest checkpoint). Arrays
-are addressed by flattened pytree paths; restore takes the caller's example
-tree (from init) so structure/dtype mismatches fail loudly. On a multi-host
-deployment each host writes its addressable shards under host_<i>/ — on this
-single-process target the gather is a no-op device_get.
+rename so a crash mid-save never corrupts the latest checkpoint; stale
+``*.tmp`` dirs left by a crashed save are pruned by the next successful
+save's cleanup). Arrays are addressed by flattened pytree paths; restore
+takes the caller's example tree (from init) so structure/dtype mismatches
+fail loudly, and registers the step it reads in a protect-set so a
+concurrent keep-N cleanup never deletes a checkpoint mid-restore. On a
+multi-host deployment each host writes its addressable shards under
+host_<i>/ — on this single-process target the gather is a no-op
+device_get.
 """
 from __future__ import annotations
 
@@ -13,10 +17,13 @@ import json
 import os
 import shutil
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import numpy as np
+
+# steps currently being read by restore(); _cleanup never deletes them
+_RESTORING: Set[Tuple[str, int]] = set()
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -61,10 +68,18 @@ def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
 
 
 def _cleanup(ckpt_dir: str, keep: int) -> None:
+    key = os.path.abspath(ckpt_dir)
     steps = list_steps(ckpt_dir)
     for s in steps[:-keep]:
+        if (key, s) in _RESTORING:      # never delete a step mid-restore
+            continue
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
                       ignore_errors=True)
+    # prune stale tmp dirs from crashed saves (the current save already
+    # renamed its own tmp away before cleanup runs)
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and name.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
 
 
 def list_steps(ckpt_dir: str) -> List[int]:
@@ -92,28 +107,32 @@ def restore(ckpt_dir: str, example_tree, step: Optional[int] = None,
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "arrays.npz"))
-    flat_example = _flatten(example_tree)
-    missing = set(flat_example) - set(data.files)
-    if missing:
-        raise KeyError(f"checkpoint at step {step} missing keys: "
-                       f"{sorted(missing)[:5]}…")
-    leaves, treedef = jax.tree_util.tree_flatten(example_tree)
-    paths = [k for k, _ in
-             sorted(_flatten(example_tree).items())]
-    # rebuild in tree order, not sorted order:
-    flat_keys = ["/".join(_path_str(p) for p in path)
-                 for path, _ in
-                 jax.tree_util.tree_flatten_with_path(example_tree)[0]]
-    out_leaves = []
-    for key, ex in zip(flat_keys, leaves):
-        arr = data[key]
-        if tuple(arr.shape) != tuple(ex.shape):
-            raise ValueError(f"{key}: ckpt shape {arr.shape} != {ex.shape}")
-        out_leaves.append(arr.astype(ex.dtype))
+    guard = (os.path.abspath(ckpt_dir), int(step))
+    _RESTORING.add(guard)
+    try:
+        d = os.path.join(ckpt_dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        flat_example = _flatten(example_tree)
+        missing = set(flat_example) - set(data.files)
+        if missing:
+            raise KeyError(f"checkpoint at step {step} missing keys: "
+                           f"{sorted(missing)[:5]}…")
+        leaves, treedef = jax.tree_util.tree_flatten(example_tree)
+        # rebuild in tree order, not sorted order:
+        flat_keys = ["/".join(_path_str(p) for p in path)
+                     for path, _ in
+                     jax.tree_util.tree_flatten_with_path(example_tree)[0]]
+        out_leaves = []
+        for key, ex in zip(flat_keys, leaves):
+            arr = data[key]
+            if tuple(arr.shape) != tuple(ex.shape):
+                raise ValueError(f"{key}: ckpt shape {arr.shape} != "
+                                 f"{ex.shape}")
+            out_leaves.append(arr.astype(ex.dtype))
+    finally:
+        _RESTORING.discard(guard)
     tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
     if shardings is not None:
         tree = jax.tree.map(jax.device_put, tree, shardings)

@@ -1,5 +1,7 @@
 """Elastic re-sharding: restore a checkpoint written under mesh A onto a
-different mesh B (grow/shrink the data axis, change model parallelism).
+different mesh B (grow/shrink the data axis, change model parallelism),
+plus the selection-state reshard that maps surviving per-lane GreedyML
+solutions onto a re-planned (smaller) accumulation tree after a lane loss.
 
 Checkpoints store full (unsharded) arrays, so resharding is just resolving
 fresh PartitionSpecs against the NEW mesh and device_put-ing — the logical
@@ -8,9 +10,11 @@ what runtime/elastic.py uses when the scheduler changes the device pool.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+import math
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
 from repro.checkpoint import manager
@@ -24,3 +28,47 @@ def restore_resharded(ckpt_dir: str, example_tree, axes_tree, mesh: Mesh,
     shardings = tree_shardings(axes_tree, example_tree, mesh, rules)
     return manager.restore(ckpt_dir, example_tree, step=step,
                            shardings=shardings)
+
+
+def reshard_solutions(lane_sols, survivors: Sequence[int],
+                      new_lanes: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Map surviving per-lane GreedyML solutions onto a smaller tree's
+    leaf pools (the degraded-tree recovery path, DESIGN §Fault tolerance).
+
+    ``lane_sols``: stacked per-lane Solution state (leading dim = old lane
+    count) from the last merged-level checkpoint. ``survivors``: old lane
+    ids still alive (the dead lane's row is dropped — its partition's
+    contribution is the Barbosa-style expected loss). Each of the
+    ``new_lanes`` leaves receives ⌈s/new_lanes⌉ survivor solutions
+    round-robin, concatenated into one candidate pool of fixed width
+    P = ⌈s/new_lanes⌉·k (padded invalid). Pooling two survivor solutions
+    into one leaf is itself a valid accumulation step — the new tree's
+    leaf Greedy selects k from the pooled union exactly as an interior
+    node of the original tree would have.
+
+    Returns host-side ``(pool_ids, pool_payloads, pool_valid)`` stacked
+    (new_lanes, P, …), ready for LevelDispatcher.leaves on the new tree.
+    """
+    survivors = list(survivors)
+    if not survivors:
+        raise ValueError("no surviving lanes to reshard")
+    if new_lanes < 1 or new_lanes > len(survivors):
+        raise ValueError(f"new_lanes={new_lanes} must be in "
+                         f"[1, {len(survivors)}]")
+    ids = np.asarray(lane_sols.ids)[survivors]          # (s, k)
+    pay = np.asarray(lane_sols.payloads)[survivors]     # (s, k, …)
+    val = np.asarray(lane_sols.valid)[survivors]        # (s, k)
+    s, k = ids.shape
+    per = math.ceil(s / new_lanes)
+    pool = per * k
+    pool_ids = np.full((new_lanes, pool), -1, np.int32)
+    pool_pay = np.zeros((new_lanes, pool) + pay.shape[2:], pay.dtype)
+    pool_val = np.zeros((new_lanes, pool), bool)
+    for j, row in enumerate(range(s)):
+        lane, slot = j % new_lanes, j // new_lanes
+        sl = slice(slot * k, (slot + 1) * k)
+        pool_ids[lane, sl] = ids[row]
+        pool_pay[lane, sl] = pay[row]
+        pool_val[lane, sl] = val[row]
+    return pool_ids, pool_pay, pool_val

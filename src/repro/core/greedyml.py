@@ -31,8 +31,9 @@ engine independently of the leaves.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.greedy import Solution, greedy, replay_value, select_better
+from repro.kernels import ops as kernel_ops
 
 F32 = jnp.float32
 
@@ -92,6 +94,54 @@ def _leaf_key(seed: Optional[int]) -> jax.Array:
     return jax.random.fold_in(jax.random.PRNGKey(seed), 0)
 
 
+def accumulate_one_level(objective, s_prev: Solution, k: int,
+                         tree_axes: Sequence[str], radices: Sequence[int],
+                         lvl: int, aug: Optional[jax.Array] = None,
+                         sample_level: int = 0, node_engine: str = "auto",
+                         seed: Optional[int] = None
+                         ) -> Tuple[Solution, jax.Array, jax.Array]:
+    """ONE accumulation round of Algorithm 3.1: gather the child solutions
+    over ``tree_axes[lvl]``, run the node-local Greedy on the b·k union,
+    and argmax{f(S), f(S_prev)}. Must be called with ALL of `tree_axes`
+    bound (inside shard_map over the mesh, or nested vmap axis_names for
+    the single-device simulation) — the per-lane PRNG stream folds in the
+    full mixed-radix machine id.
+
+    Returns ``(solution, ground, ground_valid)`` — the node-local
+    evaluation set is handed back so callers can replay extra competitors
+    (``carry_prev``) against the same ground the level was scored on.
+
+    This is the unit the supervised runtime (runtime/supervisor.py)
+    dispatches once per level, checkpointing the per-lane state in
+    between; `accumulate_levels` keeps the monolithic whole-tree SPMD
+    program by looping over it.
+    """
+    ax = tree_axes[lvl]
+    u_ids = lax.all_gather(s_prev.ids, ax, axis=0, tiled=True)
+    u_pay = lax.all_gather(s_prev.payloads, ax, axis=0, tiled=True)
+    u_val = lax.all_gather(s_prev.valid, ax, axis=0, tiled=True)
+    ground, ground_valid = u_pay, u_val
+    if aug is not None:
+        ground = jnp.concatenate([u_pay, aug], axis=0)
+        ground_valid = jnp.concatenate(
+            [u_val, jnp.ones(aug.shape[0], bool)], axis=0)
+    lvl_key = None
+    if sample_level:
+        lvl_key = jax.random.fold_in(
+            _level_key(seed, lvl),
+            _machine_flat_id(tree_axes, radices))
+    s_new = greedy(objective, u_ids, u_pay, u_val, k,
+                   ground=ground, ground_valid=ground_valid,
+                   sample=sample_level, key=lvl_key,
+                   engine=node_engine)
+    prev_score = replay_value(objective, s_prev.payloads,
+                              s_prev.valid, ground, ground_valid)
+    s_out = select_better(
+        s_new, Solution(s_prev.ids, s_prev.payloads, s_prev.valid,
+                        prev_score, s_prev.evals))
+    return s_out, ground, ground_valid
+
+
 def accumulate_levels(objective, s_prev: Solution, k: int,
                       tree_axes: Sequence[str], radices: Sequence[int],
                       aug_levels: Optional[jax.Array] = None,
@@ -103,8 +153,9 @@ def accumulate_levels(objective, s_prev: Solution, k: int,
     function: starting from ANY per-lane solution `s_prev` (a leaf Greedy
     for greedyml proper, a sieve summary for the streaming continuous
     mode — streaming/driver.py), run the level-ℓ gather + node-local
-    Greedy + argmax{f(S), f(S_prev)} recurrence up the tree. Must be
-    called inside shard_map over `tree_axes`.
+    Greedy + argmax{f(S), f(S_prev)} recurrence up the tree (a loop over
+    `accumulate_one_level`). Must be called inside shard_map over
+    `tree_axes`.
 
     ``aug_levels``: optional (L, A, …) per-level extra evaluation elements
     concatenated to each node's ground set (paper §6.4 augmentation; the
@@ -118,29 +169,11 @@ def accumulate_levels(objective, s_prev: Solution, k: int,
     stay bit-compatible while independent runs can finally diverge.
     """
     ground, ground_valid = s_prev.payloads, s_prev.valid
-    for lvl, ax in enumerate(tree_axes):
-        u_ids = lax.all_gather(s_prev.ids, ax, axis=0, tiled=True)
-        u_pay = lax.all_gather(s_prev.payloads, ax, axis=0, tiled=True)
-        u_val = lax.all_gather(s_prev.valid, ax, axis=0, tiled=True)
-        ground, ground_valid = u_pay, u_val
-        if aug_levels is not None:
-            ground = jnp.concatenate([u_pay, aug_levels[lvl]], axis=0)
-            ground_valid = jnp.concatenate(
-                [u_val, jnp.ones(aug_levels[lvl].shape[0], bool)], axis=0)
-        lvl_key = None
-        if sample_level:
-            lvl_key = jax.random.fold_in(
-                _level_key(seed, lvl),
-                _machine_flat_id(tree_axes, radices))
-        s_new = greedy(objective, u_ids, u_pay, u_val, k,
-                       ground=ground, ground_valid=ground_valid,
-                       sample=sample_level, key=lvl_key,
-                       engine=node_engine)
-        prev_score = replay_value(objective, s_prev.payloads,
-                                  s_prev.valid, ground, ground_valid)
-        s_prev = select_better(
-            s_new, Solution(s_prev.ids, s_prev.payloads, s_prev.valid,
-                            prev_score, s_prev.evals))
+    for lvl in range(len(tree_axes)):
+        s_prev, ground, ground_valid = accumulate_one_level(
+            objective, s_prev, k, tree_axes, radices, lvl,
+            aug=aug_levels[lvl] if aug_levels is not None else None,
+            sample_level=sample_level, node_engine=node_engine, seed=seed)
     if carry_prev is not None:
         carry_score = replay_value(objective, carry_prev.payloads,
                                    carry_prev.valid, ground, ground_valid)
@@ -225,6 +258,199 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
                     out_specs=Solution(P(), P(), P(), P(), P()),
                     check_rep=False)(*args)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Level-by-level dispatch — the supervised runtime's unit of work
+# ---------------------------------------------------------------------------
+#
+# The monolithic drivers above compile the whole recurrence into ONE SPMD
+# program: a lost lane kills the dispatch and every level of progress with
+# it. The supervised runtime (runtime/supervisor.py) instead drives the
+# SAME Algorithm 3.1 rounds level-by-level from the host — each level is
+# one dispatch over the per-lane Solution state, which round-trips through
+# host memory between levels and is checkpointed there. `LevelDispatcher`
+# is the dispatch layer: identical lane-local bodies run either over a
+# real mesh (shard_map, one device per lane) or single-device (nested
+# vmap with the same named axes, core.simulate-style), so the recovery
+# logic is testable on one CPU and deployable on a pod unchanged.
+
+
+def shard_lanes(ids: jax.Array, payloads: jax.Array, valid: jax.Array,
+                lanes: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Split flat (n, …) candidate arrays into stacked (lanes, n/lanes, …)
+    blocks — lane i gets contiguous block i, the same layout the
+    monolithic driver's PartitionSpec produces."""
+    n = ids.shape[0]
+    if n % lanes:
+        raise ValueError(f"n={n} must divide over {lanes} lanes")
+    shp = (lanes, n // lanes)
+    return (jnp.reshape(ids, shp),
+            jnp.reshape(payloads, shp + payloads.shape[1:]),
+            jnp.reshape(valid, shp))
+
+
+def empty_lane_solutions(lanes: int, k: int,
+                         payload_example: jax.Array) -> Solution:
+    """Stacked all-invalid per-lane state — the checkpoint example tree
+    (manager.restore needs the structure/dtypes without running a leaf
+    dispatch)."""
+    pay = jnp.zeros((lanes, k) + payload_example.shape[1:],
+                    payload_example.dtype)
+    return Solution(jnp.full((lanes, k), -1, jnp.int32), pay,
+                    jnp.zeros((lanes, k), bool),
+                    jnp.zeros((lanes,), F32),
+                    jnp.zeros((lanes,), jnp.int32))
+
+
+def root_solution(lane_sols: Solution) -> Solution:
+    """Extract the final answer from the stacked state after the last
+    level: the paper returns machine 0's solution (all lanes agree unless
+    stochastic node sampling diverged them — row 0 IS S_0 either way)."""
+    return jax.tree.map(lambda x: x[0], lane_sols)
+
+
+@dataclasses.dataclass
+class LevelDispatcher:
+    """Dispatches one GreedyML stage at a time over stacked per-lane state.
+
+    ``radices``: per-level branching (innermost level first); lanes =
+    prod(radices). ``mesh``: a real mesh with one device per lane runs
+    every stage through shard_map; None simulates the lanes on the single
+    local device with nested vmap over the same named axes (bit-identical
+    lane-local math). All stages take/return STACKED arrays with a
+    leading (lanes, …) dim living in host-reachable memory — that is the
+    unit the supervisor checkpoints and reshards.
+    """
+
+    objective: Any
+    k: int
+    radices: Tuple[int, ...]
+    mesh: Optional[Mesh] = None
+    tree_axes: Optional[Tuple[str, ...]] = None
+    engine: str = "auto"
+    node_engine: Optional[str] = None
+    sample_leaf: int = 0
+    sample_level: int = 0
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        self.radices = tuple(self.radices)
+        self.lanes = int(math.prod(self.radices)) if self.radices else 1
+        if self.tree_axes is None:
+            if self.mesh is not None:
+                # make_machine_mesh lists axes outermost-first; tree
+                # levels are innermost-first (level 0 = low id digit)
+                self.tree_axes = tuple(reversed(self.mesh.axis_names))
+            else:
+                self.tree_axes = tuple(
+                    f"flt{i}" for i in range(len(self.radices)))
+        self.tree_axes = tuple(self.tree_axes)
+        self.node_engine = self.node_engine or self.engine
+        if self.mesh is not None:
+            got = math.prod(self.mesh.shape[a] for a in self.tree_axes)
+            if got != self.lanes:
+                raise ValueError(f"mesh axes {self.tree_axes} hold {got} "
+                                 f"devices, need {self.lanes}")
+        self._fns: Dict[Any, Any] = {}
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.radices)
+
+    # ---------------------------------------------------------------- stages
+    def leaves(self, ids: jax.Array, payloads: jax.Array,
+               valid: jax.Array) -> Solution:
+        """Leaf Greedy per lane over stacked (lanes, n_l, …) pools —
+        also the degraded tree's re-entry stage (the resharded survivor
+        pools are just leaves of the new, smaller tree)."""
+        return self._get("leaves", self._build_leaves)(ids, payloads, valid)
+
+    def level(self, lane_sols: Solution, lvl: int,
+              aug_row: Optional[jax.Array] = None) -> Solution:
+        """One accumulation round: gather over tree_axes[lvl] + node
+        Greedy + argmax{f(S), f(S_prev)}, over stacked per-lane state."""
+        fn = self._get(("level", lvl, aug_row is not None),
+                       lambda: self._build_level(lvl, aug_row is not None))
+        return fn(lane_sols, aug_row) if aug_row is not None \
+            else fn(lane_sols)
+
+    # ------------------------------------------------------------- builders
+    def _get(self, key, build):
+        if key not in self._fns:
+            self._fns[key] = build()
+        return self._fns[key]
+
+    def _leaf_body(self, ids, pay, val, mid):
+        key = None
+        if self.sample_leaf:
+            key = jax.random.fold_in(_leaf_key(self.seed), mid)
+        return greedy(self.objective, ids, pay, val, self.k,
+                      sample=self.sample_leaf, key=key, engine=self.engine)
+
+    def _build_leaves(self):
+        if self.mesh is None or not self.radices:
+            def run(ids, pay, val):
+                mids = jnp.arange(self.lanes, dtype=jnp.int32)
+                with kernel_ops.fused_replicas(self.lanes):
+                    return jax.jit(jax.vmap(self._leaf_body))(
+                        ids, pay, val, mids)
+            return run
+        spec = P(tuple(reversed(self.tree_axes)))
+        axes, radices = self.tree_axes, self.radices
+
+        def body(ids, pay, val):
+            mid = _machine_flat_id(axes, radices)
+            s = self._leaf_body(ids[0], pay[0], val[0], mid)
+            return jax.tree.map(lambda x: x[None], s)
+
+        sol_spec = Solution(spec, spec, spec, spec, spec)
+        return jax.jit(shard_map(body, mesh=self.mesh,
+                                 in_specs=(spec, spec, spec),
+                                 out_specs=sol_spec, check_rep=False))
+
+    def _build_level(self, lvl: int, has_aug: bool):
+        axes, radices = self.tree_axes, self.radices
+
+        def body(sol, *aug):
+            out, _, _ = accumulate_one_level(
+                self.objective, sol, self.k, axes, radices, lvl,
+                aug=aug[0] if aug else None,
+                sample_level=self.sample_level,
+                node_engine=self.node_engine, seed=self.seed)
+            return out
+
+        if self.mesh is None:
+            f = body
+            for ax in axes:          # innermost level = innermost vmap
+                in_axes = (0, None) if has_aug else (0,)
+                f = jax.vmap(f, in_axes=in_axes, axis_name=ax)
+            grouped_shape = tuple(reversed(radices))
+
+            def run(lane_sols, *aug):
+                # lane id's level-0 digit is LOW → row-major reshape with
+                # the innermost radix last matches the tree arithmetic
+                grouped = jax.tree.map(
+                    lambda x: x.reshape(grouped_shape + x.shape[1:]),
+                    lane_sols)
+                with kernel_ops.fused_replicas(self.lanes):
+                    out = jax.jit(f)(grouped, *aug)
+                return jax.tree.map(
+                    lambda x: x.reshape((self.lanes,)
+                                        + x.shape[len(radices):]), out)
+            return run
+
+        spec = P(tuple(reversed(axes)))
+        sol_spec = Solution(spec, spec, spec, spec, spec)
+
+        def shbody(sol_stacked, *aug):
+            sol = jax.tree.map(lambda x: x[0], sol_stacked)
+            out = body(sol, *aug)
+            return jax.tree.map(lambda x: x[None], out)
+
+        in_specs = (sol_spec, P()) if has_aug else (sol_spec,)
+        return jax.jit(shard_map(shbody, mesh=self.mesh, in_specs=in_specs,
+                                 out_specs=sol_spec, check_rep=False))
 
 
 def randgreedi_distributed(objective, ids, payloads, valid, k, mesh,

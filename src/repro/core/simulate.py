@@ -95,11 +95,20 @@ def run_tree_dense(objective_name: str, payloads: np.ndarray, k: int,
                    universe: int = 0, augment: int = 0,
                    backend: Optional[str] = None,
                    engine: str = "auto",
-                   node_engine: Optional[str] = None) -> SimResult:
+                   node_engine: Optional[str] = None,
+                   drop_leaves: Sequence[int] = ()) -> SimResult:
     """``engine`` drives the leaf Greedy calls; ``node_engine`` (default:
     inherit) the accumulation nodes — under 'auto' the (b·k + A)×(b·k)
     node shape lands on the megakernel's VMEM-resident tier, one kernel
-    dispatch per internal node (DESIGN §Perf)."""
+    dispatch per internal node (DESIGN §Perf).
+
+    ``drop_leaves``: machine ids whose partitions are LOST (their pools
+    are invalidated, so they contribute empty leaf solutions) — the
+    single-device reference for the degraded-tree fault-recovery path
+    (runtime/supervisor.py): losing a constant fraction of partitions
+    costs only the Barbosa et al. (1502.02606) / Lucic et al.
+    (1605.09619) expected-quality term, which tests assert as a
+    tolerance band against the failure-free run."""
     node_engine = node_engine or engine
     n = payloads.shape[0]
     m, b, L = tree.m, tree.b, tree.num_levels
@@ -120,6 +129,8 @@ def run_tree_dense(objective_name: str, payloads: np.ndarray, k: int,
         pool_valid[mi, j] = True
         pool_pay[mi, j] = payloads[e]
         cursor[mi] += 1
+    for mi in drop_leaves:
+        pool_valid[mi] = False          # lost partition → empty leaf
 
     rng = np.random.default_rng(seed + 1)
 

@@ -34,3 +34,28 @@ def plan_new_mesh(current_data: int, current_model: int,
     while p * 2 <= data:
         p *= 2
     return p, model
+
+
+def plan_degraded_tree(survivors: int, b: int) -> Tuple[int, int]:
+    """Re-plan the GreedyML accumulation tree after losing lanes: the
+    largest full b-ary tree that fits the surviving lane count, as
+    ``(lanes', levels')`` with lanes' = b^levels' ≤ survivors. The
+    shard_map/vmap drivers need a full mixed-radix factorization, so the
+    degraded tree keeps the branching factor and drops levels — an
+    m'-lane tree over the survivors' solutions is still a valid GreedyML
+    tree (every survivor solution becomes leaf input via
+    checkpoint.reshard.reshard_solutions), and dropping the dead
+    partition costs only the Barbosa et al. (1502.02606) / Lucic et al.
+    (1605.09619) expected-quality term — see DESIGN §Fault tolerance.
+
+    survivors < b degrades to a single lane (lanes'=1, levels'=0): the
+    re-entry Greedy over the pooled survivor solutions IS the root."""
+    if survivors < 1:
+        raise ValueError("no surviving lanes — nothing to re-plan")
+    if b < 2:
+        raise ValueError(f"branching must be ≥ 2, got {b}")
+    lanes, levels = 1, 0
+    while lanes * b <= survivors:
+        lanes *= b
+        levels += 1
+    return lanes, levels

@@ -42,9 +42,19 @@ class Supervisor:
 
     def run(self, state, step_fn: Callable, num_steps: int,
             save_extra: Optional[Callable] = None):
-        """state: pytree; step_fn(state, step) -> (state, metrics)."""
-        start = self._restore_or(state)
-        state, step = start
+        """state: pytree; step_fn(state, step) -> (state, metrics).
+
+        ``max_restarts`` bounds restarts PER RECOVERY EPISODE (between two
+        successful checkpoints), not across the whole run: a checkpoint is
+        progress, so independent later failures get a fresh retry budget
+        instead of inheriting the count from unrelated earlier ones. A
+        failure before the first checkpoint cold-restarts from the
+        caller's initial ``state`` (logged as ``cold_restart``) rather
+        than giving up — replaying the whole prefix is always a valid
+        recovery, just the most expensive one.
+        """
+        initial = state
+        state, step = self._restore_or(state)
         restarts = 0
         while step < num_steps:
             try:
@@ -60,23 +70,27 @@ class Supervisor:
                     manager.save(self.ckpt_dir, step, state, extra=extra,
                                  keep=self.keep)
                     self.events.append({"kind": "checkpoint", "step": step})
+                    restarts = 0          # progress → fresh retry budget
             except WorkerFailure as e:
                 restarts += 1
                 self.events.append({"kind": "failure", "step": step,
                                     "error": str(e)})
                 if restarts > self.max_restarts:
                     raise
-                state, step = self._restore_or((state, step), force=True)
+                state, step = self._restore_or((initial, 0), force=True)
                 self.events.append({"kind": "restart", "step": step})
         return state, step
 
     def _restore_or(self, default, force: bool = False):
         last = manager.latest_step(self.ckpt_dir)
         if last is None:
+            state, step = (default if isinstance(default, tuple)
+                           else (default, 0))
             if force:
-                raise RuntimeError("failure before first checkpoint; "
-                                   "cannot recover")
-            return default if isinstance(default, tuple) else (default, 0)
+                # failure before the first checkpoint: restart from the
+                # caller's initial state instead of refusing to recover
+                self.events.append({"kind": "cold_restart", "step": step})
+            return state, step
         example = default[0] if isinstance(default, tuple) else default
         state, manifest = manager.restore(self.ckpt_dir, example, step=last)
         return state, manifest["step"]

@@ -105,7 +105,8 @@ def stream_select_continuous(objective, stream: Iterable, k: int, *,
                              backend: Optional[str] = None,
                              node_engine: str = "auto",
                              sample_level: int = 0,
-                             seed: Optional[int] = None
+                             seed: Optional[int] = None,
+                             supervisor=None
                              ) -> Tuple[Solution, dict]:
     """Continuous mode with `lanes` vmapped lanes (the single-device
     simulation of the mesh — core.simulate style). Returns the final
@@ -124,6 +125,16 @@ def stream_select_continuous(objective, stream: Iterable, k: int, *,
     ``sample_level``/``seed`` enable reseedable stochastic greedy at the
     merge nodes (threaded to accumulate_levels; seed None keeps the
     legacy fixed tape).
+
+    ``supervisor``: optional runtime.supervisor.SelectionSupervisor —
+    every periodic merge then runs under fault supervision (DESIGN
+    §Fault tolerance): a transient WorkerFailure replays the merge from
+    the in-memory per-lane sieve states, a repeatedly-failing lane is
+    declared lost mid-merge and its sieve state reset so a replacement
+    worker joins cold (the merge proceeds without its summary), and lane
+    states + the merged solution are checkpointed after every merge.
+    The structured recovery log lands in ``supervisor.events`` and is
+    echoed in the returned info dict.
     """
     streamer = SieveStreamer(objective, k, eps, ground=ground,
                              ground_valid=ground_valid, backend=backend)
@@ -180,15 +191,25 @@ def stream_select_continuous(objective, stream: Iterable, k: int, *,
         states = step(states, ids_l, pay_l, val_l)
         done = i + 1
         if done % merge_every == 0:
-            merged = merge_round(states, merged)
+            if supervisor is not None:
+                merged, states = supervisor.run_merge(
+                    merge_round, states, merged, len(merges), base, lanes)
+            else:
+                merged = merge_round(states, merged)
             merges.append(float(merged.value))
     if states is None:
         raise ValueError("empty stream")
     if merged is None or done % merge_every != 0:
-        merged = merge_round(states, merged)
+        if supervisor is not None:
+            merged, states = supervisor.run_merge(
+                merge_round, states, merged, len(merges), base, lanes)
+        else:
+            merged = merge_round(states, merged)
         merges.append(float(merged.value))
-    return merged, {"merges": merges, "batches": done,
-                    "tree": (lanes, b, levels)}
+    info = {"merges": merges, "batches": done, "tree": (lanes, b, levels)}
+    if supervisor is not None:
+        info["events"] = list(supervisor.events)
+    return merged, info
 
 
 # ---------------------------------------------------------------------------

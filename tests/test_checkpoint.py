@@ -69,12 +69,18 @@ def test_supervisor_recovers_from_injected_failures(tmp_path):
     assert float(state["x"]) == 40  # state consistent with 40 applied steps
 
 
-def test_supervisor_failure_before_first_checkpoint_raises(tmp_path):
+def test_supervisor_failure_before_first_checkpoint_cold_restarts(tmp_path):
+    """A failure before any checkpoint exists must NOT give up: the run
+    cold-restarts from the caller's initial state (replaying the prefix
+    is always a valid — if expensive — recovery) and still completes."""
     sup = Supervisor(ckpt_dir=str(tmp_path / "ck"), ckpt_every=10,
                      injector=FailureInjector((2,)), max_restarts=1)
-    with pytest.raises(RuntimeError):
-        sup.run({"x": jnp.zeros(())},
-                lambda s, i: ({"x": s["x"] + 1}, {}), 20)
+    state, final = sup.run({"x": jnp.zeros(())},
+                           lambda s, i: ({"x": s["x"] + 1}, {}), 20)
+    assert final == 20
+    assert float(state["x"]) == 20  # prefix replayed from the initial state
+    kinds = [e["kind"] for e in sup.events]
+    assert "cold_restart" in kinds and "failure" in kinds
 
 
 def test_elastic_reshard_restore(tmp_path):
