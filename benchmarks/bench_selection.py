@@ -46,6 +46,7 @@ from repro.data.synthetic import gen_images, gen_kcover, pack_bitmaps
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_selection.json")
 OBJ_PATH = os.path.join(os.path.dirname(__file__), "BENCH_objectives.json")
+TUNE_PATH = os.path.join(os.path.dirname(__file__), "BENCH_autotune.json")
 
 HEADLINE = dict(n=4096, d=256, k=32)          # acceptance config (C = N)
 SMALL = dict(n=1024, d=256, k=16)
@@ -183,6 +184,47 @@ def objective_matrix(cfg=MATRIX):
     return results
 
 
+# measured-plan arm (ISSUE 7): shape chosen so the static planner's f32
+# resident working set busts the default 8 MB VMEM budget (→ 2-dispatch
+# streaming) while the tuner's sub-f32 resident candidates fit (→ ONE
+# dispatch) — the win the closed-form ladder can never find on its own
+TUNE_POINTS = (("facility", 1024, 64, 16),
+               ("kmedoid", 1024, 64, 16),
+               ("satcover", 1024, 64, 16))
+
+
+def autotuned_arm(points=TUNE_POINTS, backend="interpret", reps=2):
+    """Static-heuristic vs measured-plan wall time + jaxpr-counted
+    dispatches per (rule, shape) → ``benchmarks/BENCH_autotune.json``.
+
+    Each point runs launch/autotune.py's tuner (plan_override through
+    the real greedy driver, selection-identity-gated candidates) and
+    records the winner next to the static plan it replaces."""
+    from repro.launch.autotune import tune_one
+    pts = {}
+    for (name, n, d, k) in points:
+        key, e = tune_one(name, n, d, k, backend=backend, reps=reps,
+                          blocks_per_tier=1)
+        pts[f"{name}@n{n}d{d}k{k}"] = dict(
+            cache_key=key,
+            static=dict(tier=e["static_tier"], dtype=e["static_dtype"],
+                        wall_s=e["static_wall_s"],
+                        dispatches=e["static_dispatches"]),
+            tuned=dict(tier=e["tier"], dtype=e["dtype"],
+                       block_n=e["block_n"],
+                       loop_block_n=e["loop_block_n"],
+                       wall_s=e["wall_s"], dispatches=e["dispatches"]),
+            speedup=e["speedup"])
+    from repro.kernels import plans
+    results = dict(config=dict(backend=backend, reps=reps,
+                               device=jax.default_backend(),
+                               budgets=plans.budget_snapshot()),
+                   points=pts)
+    with open(TUNE_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
 def flop_model(n, c, d, k):
     """Analytic gains-term FLOPs per greedy invocation (ISSUE 1)."""
     step = k * (2 * n * c * d + 3 * n * c) + k * 2 * n * d   # gains + update
@@ -279,5 +321,20 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--matrix-only", action="store_true",
                     help="only the registry-sweep objective×tier matrix")
+    ap.add_argument("--autotuned", action="store_true",
+                    help="only the static-vs-measured-plan arm "
+                         "(BENCH_autotune.json)")
     args = ap.parse_args()
-    main(args.full, args.matrix_only)
+    if args.autotuned:
+        res = autotuned_arm()
+        print("point,static_tier/dtype,tuned_tier/dtype,"
+              "static_ms,tuned_ms,speedup,dispatches static->tuned")
+        for pt, r in res["points"].items():
+            s, t = r["static"], r["tuned"]
+            print(f"{pt},{s['tier']}/{s['dtype']},"
+                  f"{t['tier']}/{t['dtype']},"
+                  f"{s['wall_s']*1e3:.1f},{t['wall_s']*1e3:.1f},"
+                  f"{r['speedup']},{s['dispatches']}->{t['dispatches']}")
+        print(f"wrote {TUNE_PATH}")
+    else:
+        main(args.full, args.matrix_only)

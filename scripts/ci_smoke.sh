@@ -48,6 +48,32 @@ REPRO_KERNEL_BACKEND=interpret python -m pytest -q \
     tests/test_streaming.py
 python -m repro.launch.stream --smoke
 
+echo "== measured-plan autotune (smoke grid, interpret) =="
+# tiny tuner grid: must write the REPRO_AUTOTUNE_CACHE file, and a
+# subsequent select_engine must REUSE the tuned entry (not re-derive the
+# static heuristic plan)
+AT_CACHE="$(mktemp -d)/plans.json"
+REPRO_AUTOTUNE_CACHE="${AT_CACHE}" python -m repro.launch.autotune --smoke
+test -s "${AT_CACHE}" || {
+    echo "FAIL: autotune cache was not written"
+    exit 1
+}
+REPRO_AUTOTUNE_CACHE="${AT_CACHE}" python - <<'PY'
+from repro.kernels import plans, rules
+entries = plans.load_autotune_cache()
+assert entries, "autotune cache parsed empty"
+key = plans.autotune_key(rules.DOT_MAX, 192, 192, 32, "interpret")
+assert key in entries, (key, sorted(entries))
+e = entries[key]
+tuned = plans.select_engine(rules.DOT_MAX, 192, 192, 32,
+                            requested="auto", backend="interpret")
+if e["tier"] == "step":
+    assert tuned.engine == "step", tuned
+else:
+    assert (tuned.tier, tuned.dtype) == (e["tier"], e["dtype"]), (tuned, e)
+print(f"autotune cache reused: {key} -> {tuned.engine}/{tuned.dtype}")
+PY
+
 echo "== fault tolerance (supervised runtime, 8-device mesh) =="
 # level-replay bit-identity, the degraded-tree 0.95x quality band, and a
 # supervised streaming pass — over a real 8-lane host mesh (faultrun sets

@@ -187,7 +187,8 @@ class RuleObjective:
         if plan.engine == "mega_resident":
             rows = ops.greedy_loop_resident(state.ground, cands, state.row,
                                             cand_valid, k, self.rule,
-                                            backend=self.backend)
+                                            backend=self.backend,
+                                            cache_dtype=plan.dtype)
         elif plan.engine == "mega_stream":
             mat = ops.pairwise_matrix(state.ground, cands, self.rule,
                                       backend=self.backend,

@@ -39,12 +39,12 @@ from repro.kernels.tpu_compat import compiler_params
 F32 = jnp.float32
 
 
-def _kernel(prev_ref, mat_ref, row_ref, mask_ref,
-            newrow_ref, best_ref, gain_ref, acc_ref, *, rule: KernelRule):
+def _step_body(m, prev, row_ref, mask_ref,
+               newrow_ref, best_ref, gain_ref, acc_ref, rule: KernelRule):
+    """The fused step over one (BN, C) slab `m` (already rescaled to the
+    matrix's logical f32/uint32 values) — shared by the plain and the
+    int8-quantized kernel entry points."""
     ni = pl.program_id(0)
-    prev = prev_ref[0, 0]
-
-    m = mat_ref[...]                                   # (BN, C)
     r = row_ref[...]                                   # (1, BN)
 
     # 1. deferred update: fold the previous winner's column into the state
@@ -68,12 +68,32 @@ def _kernel(prev_ref, mat_ref, row_ref, mask_ref,
         gain_ref[0, 0] = mx
 
 
+def _kernel(prev_ref, mat_ref, row_ref, mask_ref,
+            newrow_ref, best_ref, gain_ref, acc_ref, *, rule: KernelRule):
+    _step_body(mat_ref[...], prev_ref[0, 0], row_ref, mask_ref,
+               newrow_ref, best_ref, gain_ref, acc_ref, rule)
+
+
+def _kernel_quant(prev_ref, mat_ref, scale_ref, row_ref, mask_ref,
+                  newrow_ref, best_ref, gain_ref, acc_ref, *,
+                  rule: KernelRule):
+    # int8 rescale-accumulate: dequantize the (BN, C) slab against its
+    # (1, BN) per-row scales ON-CHIP, then run the identical f32 algebra
+    m = R.dequant(mat_ref[...], scale_ref[...])
+    _step_body(m, prev_ref[0, 0], row_ref, mask_ref,
+               newrow_ref, best_ref, gain_ref, acc_ref, rule)
+
+
 @functools.partial(jax.jit, static_argnames=("rule", "block_n", "interpret"))
 def fused_step_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
                       prev: jax.Array, rule: KernelRule,
-                      block_n: int = 256, interpret: bool = False):
+                      block_n: int = 256, interpret: bool = False,
+                      scale=None):
     """mat: (N, C) cached matrix, row: (N,) state in the rule's row dtype,
     mask: (C,) 0/1 f32, prev: () int32 previous winner (-1 = none).
+    scale: (1, N) f32 per-row scales when `mat` is int8-quantized storage
+    (rules.quantize_rows) — the kernel rescales each slab to f32 on-chip
+    before the shared algebra; None for f32/bf16/uint32 storage.
 
     Returns (new_row (N,), best () int32, best_gain () f32). best_gain is
     the raw masked part-sum — callers normalize by the valid ground count.
@@ -82,15 +102,25 @@ def fused_step_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
     n, c = mat.shape
     assert n % block_n == 0 and c % 128 == 0, (n, c, block_n)
     grid = (n // block_n,)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda ni: (0, 0)),
+        pl.BlockSpec((block_n, c), lambda ni: (ni, 0)),
+        pl.BlockSpec((1, block_n), lambda ni: (0, ni)),
+        pl.BlockSpec((1, c), lambda ni: (0, 0)),
+    ]
+    operands = [prev.reshape(1, 1).astype(jnp.int32), mat,
+                row.reshape(1, n), mask.reshape(1, c)]
+    kernel = _kernel
+    if scale is not None:
+        assert scale.shape == (1, n), (scale.shape, n)
+        # the scale row blocks exactly like the state row
+        in_specs.insert(2, pl.BlockSpec((1, block_n), lambda ni: (0, ni)))
+        operands.insert(2, scale)
+        kernel = _kernel_quant
     new_row, best, gain = pl.pallas_call(
-        functools.partial(_kernel, rule=rule),
+        functools.partial(kernel, rule=rule),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda ni: (0, 0)),
-            pl.BlockSpec((block_n, c), lambda ni: (ni, 0)),
-            pl.BlockSpec((1, block_n), lambda ni: (0, ni)),
-            pl.BlockSpec((1, c), lambda ni: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, block_n), lambda ni: (0, ni)),
             pl.BlockSpec((1, 1), lambda ni: (0, 0)),
@@ -106,6 +136,5 @@ def fused_step_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
         # argmax, so it is order-dependent
         compiler_params=compiler_params("arbitrary"),
         interpret=interpret,
-    )(prev.reshape(1, 1).astype(jnp.int32), mat, row.reshape(1, n),
-      mask.reshape(1, c))
+    )(*operands)
     return new_row[0], best[0, 0], gain[0, 0]

@@ -51,10 +51,12 @@ from repro.kernels.tpu_compat import compiler_params
 F32 = jnp.float32
 
 
-def _stream_kernel(mat_ref, row_ref, mask_ref,
-                   rowout_ref, best_ref, gain_ref,
-                   rows_ref, msk_ref, acc_ref, prev_ref, *,
-                   rule: KernelRule):
+def _stream_body(m, row_ref, mask_ref,
+                 rowout_ref, best_ref, gain_ref,
+                 rows_ref, msk_ref, acc_ref, prev_ref, rule: KernelRule):
+    """One (step, row-block) grid cell over the (BN, C) slab `m` (already
+    rescaled to logical f32/uint32 values) — shared by the plain and the
+    int8-quantized kernel entry points."""
     s = pl.program_id(0)                    # selection step (sequential)
     ni = pl.program_id(1)                   # row block within a step
     k = pl.num_programs(0) - 1              # last grid step only flushes
@@ -69,7 +71,6 @@ def _stream_kernel(mat_ref, row_ref, mask_ref,
     def _init_row_block():
         rows_ref[pl.ds(ni, 1), :] = row_ref[...]
 
-    m = mat_ref[...]                                    # (BN, C)
     prev = prev_ref[0]
 
     # deferred update: fold the previous step's winner into this row block
@@ -103,14 +104,38 @@ def _stream_kernel(mat_ref, row_ref, mask_ref,
         rowout_ref[...] = r
 
 
+def _stream_kernel(mat_ref, row_ref, mask_ref,
+                   rowout_ref, best_ref, gain_ref,
+                   rows_ref, msk_ref, acc_ref, prev_ref, *,
+                   rule: KernelRule):
+    _stream_body(mat_ref[...], row_ref, mask_ref,
+                 rowout_ref, best_ref, gain_ref,
+                 rows_ref, msk_ref, acc_ref, prev_ref, rule)
+
+
+def _stream_kernel_quant(mat_ref, scale_ref, row_ref, mask_ref,
+                         rowout_ref, best_ref, gain_ref,
+                         rows_ref, msk_ref, acc_ref, prev_ref, *,
+                         rule: KernelRule):
+    # int8 rescale-accumulate: each step re-reads the 1-byte slab from
+    # HBM (a quarter of the f32 traffic) and rescales it against the
+    # (1, BN) per-row scales on-chip before the identical f32 algebra
+    m = R.dequant(mat_ref[...], scale_ref[...])
+    _stream_body(m, row_ref, mask_ref,
+                 rowout_ref, best_ref, gain_ref,
+                 rows_ref, msk_ref, acc_ref, prev_ref, rule)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("k", "rule", "block_n", "interpret"))
 def greedy_loop_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
                        k: int, rule: KernelRule, block_n: int = 256,
-                       interpret: bool = False):
-    """Streaming tier. mat: (N, C) cached matrix (f32/bf16 storage for
-    feature rules — f32 accumulate — or uint32 word-major bitmaps); row:
-    (1, N) state in the rule's row dtype; mask: (1, C) 0/1 f32.
+                       interpret: bool = False, scale=None):
+    """Streaming tier. mat: (N, C) cached matrix (f32/bf16/int8 storage
+    for feature rules — f32 accumulate — or uint32 word-major bitmaps);
+    row: (1, N) state in the rule's row dtype; mask: (1, C) 0/1 f32;
+    scale: (1, N) f32 per-row scales when `mat` is int8-quantized storage
+    (None otherwise).
 
     Returns (final_row (N,), bests (k,) i32 with −1 = rejected step,
     gains (k,) f32 raw part sums). N, C padded by the ops.py wrapper.
@@ -118,14 +143,23 @@ def greedy_loop_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
     n, c = mat.shape
     assert n % block_n == 0 and c % 128 == 0, (n, c, block_n)
     nb = n // block_n
+    in_specs = [
+        pl.BlockSpec((block_n, c), lambda s, ni: (ni, 0)),
+        pl.BlockSpec((1, block_n), lambda s, ni: (0, ni)),
+        pl.BlockSpec((1, c), lambda s, ni: (0, 0)),
+    ]
+    operands = [mat, row, mask]
+    kernel = _stream_kernel
+    if scale is not None:
+        assert scale.shape == (1, n), (scale.shape, n)
+        in_specs.insert(1, pl.BlockSpec((1, block_n),
+                                        lambda s, ni: (0, ni)))
+        operands.insert(1, scale)
+        kernel = _stream_kernel_quant
     row_out, best, gain = pl.pallas_call(
-        functools.partial(_stream_kernel, rule=rule),
+        functools.partial(kernel, rule=rule),
         grid=(k + 1, nb),
-        in_specs=[
-            pl.BlockSpec((block_n, c), lambda s, ni: (ni, 0)),
-            pl.BlockSpec((1, block_n), lambda s, ni: (0, ni)),
-            pl.BlockSpec((1, c), lambda s, ni: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, block_n), lambda s, ni: (0, ni)),
             pl.BlockSpec((1, 1), lambda s, ni: (s, 0)),
@@ -146,14 +180,27 @@ def greedy_loop_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
         # and the row-block dim carries the accumulator + mask/prev updates
         compiler_params=compiler_params("arbitrary", "arbitrary"),
         interpret=interpret,
-    )(mat, row, mask)
+    )(*operands)
     return row_out[0], best[:k, 0], gain[:k, 0]
 
 
 def _resident_kernel(ground_ref, cands_ref, row_ref, mask_ref,
                      rowout_ref, best_ref, gain_ref, *,
-                     k: int, rule: KernelRule):
+                     k: int, rule: KernelRule, cache_dtype: str,
+                     logical_n: int, logical_c: int):
     m = R.matrix_block(ground_ref[...], cands_ref[...], rule)  # (N, C)
+    if not rule.is_bitmap and cache_dtype == "int8":
+        # quantized residency: the matrix the loop sees is the int8
+        # per-row-scaled storage rounded back to f32 — identical rounding
+        # to the HBM-cached int8 tiers, so selections agree across tiers.
+        # Pad rows/cols are zeroed first so the per-row scales see only
+        # logical columns (bit-parity with the ref oracle's logical build)
+        rows = jax.lax.broadcasted_iota(jnp.int32, m.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, m.shape, 1)
+        m = jnp.where((rows < logical_n) & (cols < logical_c), m, 0.0)
+        m = R.dequant(*R.quantize_rows(m))
+    elif not rule.is_bitmap and cache_dtype == "bfloat16":
+        m = m.astype(jnp.bfloat16).astype(F32)
 
     cols = jax.lax.broadcasted_iota(jnp.int32, (1, m.shape[1]), 1)
     steps = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
@@ -184,16 +231,24 @@ def _resident_kernel(ground_ref, cands_ref, row_ref, mask_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "rule", "interpret"))
+                   static_argnames=("k", "rule", "interpret",
+                                    "cache_dtype", "logical_n",
+                                    "logical_c"))
 def greedy_loop_resident_pallas(ground: jax.Array, cands: jax.Array,
                                 row: jax.Array, mask: jax.Array, k: int,
-                                rule: KernelRule, interpret: bool = False):
+                                rule: KernelRule, interpret: bool = False,
+                                cache_dtype: str = "float32",
+                                logical_n: int = 0, logical_c: int = 0):
     """Resident tier: ONE dispatch builds the matrix on-chip and runs all k
     steps. Feature rules: ground (N, D), cands (C, D); bitmap rules:
     ground is an ignored placeholder and cands the (C, W) bitmaps (the
     on-chip matrix is their transpose, N = W). row: (1, N) in the rule's
     row dtype, mask: (1, C); the whole working set must fit VMEM (gated
-    by plans.fused_plan's resident check). Returns as greedy_loop_pallas.
+    by plans.fused_plan's resident check, dtype-aware). `cache_dtype` is
+    the plan's storage dtype: 'int8'/'bfloat16' round the on-chip matrix
+    to exactly what the HBM-cached tiers would store (raising the
+    residency ceiling per plans.resident_fits), 'float32'/'uint32' keep
+    the legacy exact build. Returns as greedy_loop_pallas.
     """
     n = row.shape[1]
     c = cands.shape[0]
@@ -203,7 +258,10 @@ def greedy_loop_resident_pallas(ground: jax.Array, cands: jax.Array,
     else:
         assert ground.shape == (n, cands.shape[1])
     row_out, best, gain = pl.pallas_call(
-        functools.partial(_resident_kernel, k=k, rule=rule),
+        functools.partial(_resident_kernel, k=k, rule=rule,
+                          cache_dtype=cache_dtype,
+                          logical_n=logical_n or n,
+                          logical_c=logical_c or c),
         out_shape=[
             jax.ShapeDtypeStruct((1, n), rule.dtype),
             jax.ShapeDtypeStruct((1, k), jnp.int32),

@@ -38,7 +38,7 @@ of B arrivals into ALL L sieve levels in one dispatch
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +67,41 @@ _bucket_len = plans.bucket_len
 # placeholder "ground" input for bitmap rules: their matrix is built from
 # the candidate payloads alone, but the kernels keep one uniform signature
 _DUMMY_GROUND = (8, 128)
+
+
+class QuantMatrix(NamedTuple):
+    """int8-quantized cached matrix: `q` (N, C) int8 storage + `scale`
+    (1, N) f32 per-row scales (rules.quantize_rows). A NamedTuple, so it
+    is a jax pytree and threads through jit boundaries and the greedy
+    drivers exactly like a plain cached array; `.shape`/`.dtype` mirror
+    the storage array so shape/itemsize probes work unchanged."""
+    q: jax.Array
+    scale: jax.Array
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+
+def _dequant_mat(mat):
+    """Logical f32 view of a cached matrix: QuantMatrix → rescaled f32
+    (bit-identical to the kernels' on-chip rescale — same primitive),
+    plain arrays pass through."""
+    if isinstance(mat, QuantMatrix):
+        return rules_mod.dequant(mat.q, mat.scale)
+    return mat
+
+
+def _quantized_ground(ground):
+    """(q int8, scale (1, N)) for a padded f32 ground block, plus the
+    rounded f32 features the ref oracles must see so kernel and oracle
+    selections stay bit-identical under int8."""
+    q, scale = rules_mod.quantize_rows(ground)
+    return q, scale, rules_mod.dequant(q, scale)
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0,
@@ -100,9 +135,19 @@ def gains(ground, row, cands, cand_valid, rule: KernelRule, backend=None):
     Feature rules: ground (N, D), row (N,) state (mind/curmax/cursum),
     cands (C, D). Bitmap rules: ground ignored (may be None), row (W,)
     covered words, cands (C, W) candidate bitmaps.
+
+    When REPRO_FUSED_CACHE_DTYPE forces 'int8', the per-step path stores
+    the ground features quantized too (per-row scale; the kernel
+    rescale-accumulates in f32, quartering its dominant HBM read); the
+    ref oracle sees the identically ROUNDED f32 features, so selections
+    stay bit-identical across backends.
     """
     b = _backend(backend)
+    quant = (not rule.is_bitmap and ground is not None
+             and flags.fused_cache_dtype() == "int8")
     if b == "ref":
+        if quant:
+            ground = _quantized_ground(ground.astype(F32))[2]
         return ref.gains(ground, _cast_row(row, rule), cands, cand_valid,
                          rule)
     c = cands.shape[0]
@@ -117,8 +162,11 @@ def gains(ground, row, cands, cand_valid, rule: KernelRule, backend=None):
     r = _pad_to(_cast_row(row, rule), 0, TILE_N,
                 value=_row_pad_value(rule))  # pad rows ⇒ zero gain part
     cd = _pad_to(_pad_to(cands, 0, TILE_C), 1, 128, bucket=False)
+    gscale = None
+    if quant:
+        g, gscale, _ = _quantized_ground(g.astype(F32))
     raw = gains_pallas(g, r.reshape(1, -1), cd, rule,
-                       interpret=(b == "interpret"))[:c]
+                       interpret=(b == "interpret"), gscale=gscale)[:c]
     return jnp.where(cand_valid, raw, -jnp.inf)
 
 
@@ -133,8 +181,11 @@ def pairwise_matrix(ground, cands, rule: KernelRule, backend=None,
 
     Feature rules run the tiled pairwise kernel ((N, D) × (C, D) →
     (N, C) in ``dtype``; 'bfloat16' halves the cache's HBM footprint,
-    consumers accumulate in f32). Bitmap rules TRANSPOSE the candidate
-    payloads — (C, W) uint32 → (W, C) — with zero kernel dispatches.
+    consumers accumulate in f32; 'int8' quarters it — the result is a
+    `QuantMatrix` pytree of per-row-scaled int8 storage, and consumers
+    rescale-accumulate in f32 on-chip). Bitmap rules TRANSPOSE the
+    candidate payloads — (C, W) uint32 → (W, C) — with zero kernel
+    dispatches.
 
     Pallas backends return the BUCKET-PADDED (N_pad, C_pad) matrix
     (padding rows/cols carry junk that downstream masks neutralize); the
@@ -148,9 +199,25 @@ def pairwise_matrix(ground, cands, rule: KernelRule, backend=None,
         return _pad_to(_pad_to(cands, 0, 128), 1, 256).T   # (W_pad, C_pad)
     if b == "ref":
         m = rules_mod.matrix_block(ground, cands, rule)
+        if dtype == "int8":
+            return QuantMatrix(*rules_mod.quantize_rows(m))
         return m if dtype == "float32" else m.astype(jnp.dtype(dtype))
     g = _pad_to(_pad_to(ground, 0, 256), 1, 128, bucket=False)
     cd = _pad_to(_pad_to(cands, 0, 128), 1, 128, bucket=False)
+    if dtype == "int8":
+        # quantization is a cheap jnp epilogue on the f32 kernel output
+        # (one pass, fuses under jit) — zero extra dispatches. Pad
+        # rows/cols are zeroed FIRST: per-row scales must see only the
+        # logical columns, or the padded and the ref (logical) caches
+        # would round differently and int8 selections could drift
+        # between backends
+        m = pairwise_pallas(g, cd, mode=rule.pairwise,
+                            out_dtype="float32",
+                            interpret=(b == "interpret"))
+        logical = ((jnp.arange(m.shape[0]) < ground.shape[0])[:, None]
+                   & (jnp.arange(m.shape[1]) < cands.shape[0])[None, :])
+        return QuantMatrix(*rules_mod.quantize_rows(
+            jnp.where(logical, m, 0.0)))
     return pairwise_pallas(g, cd, mode=rule.pairwise, out_dtype=dtype,
                            interpret=(b == "interpret"))
 
@@ -169,7 +236,7 @@ def fused_step(mat, row, mask, prev, rule: KernelRule, backend=None,
     b = _backend(backend)
     n, c = row.shape[0], mask.shape[0]
     if b == "ref":
-        return ref.fused_step(mat, _cast_row(row, rule),
+        return ref.fused_step(_dequant_mat(mat), _cast_row(row, rule),
                               mask.astype(F32), prev, rule)
     n_pad, c_pad = mat.shape
     r = _pad_to(_cast_row(row, rule), 0, n_pad,
@@ -178,9 +245,11 @@ def fused_step(mat, row, mask, prev, rule: KernelRule, backend=None,
     bn = (plan.block_n if plan is not None else 0) or fused_block_n(
         n_pad, c_pad, mat.dtype.itemsize)
     assert bn, "fused_step called without a feasible plan (select_engine)"
-    new_row, best, gain = fused_step_pallas(mat, r, mk, prev, rule,
-                                            block_n=bn,
-                                            interpret=(b == "interpret"))
+    quant = isinstance(mat, QuantMatrix)
+    new_row, best, gain = fused_step_pallas(
+        mat.q if quant else mat, r, mk, prev, rule, block_n=bn,
+        interpret=(b == "interpret"),
+        scale=mat.scale if quant else None)
     return new_row[:n], best, gain
 
 
@@ -196,7 +265,7 @@ def greedy_loop(mat, row, mask, k: int, rule: KernelRule, backend=None,
     b = _backend(backend)
     n, c = row.shape[0], mask.shape[0]
     if b == "ref":
-        return ref.greedy_loop(mat, _cast_row(row, rule),
+        return ref.greedy_loop(_dequant_mat(mat), _cast_row(row, rule),
                                mask.astype(F32), k, rule)
     n_pad, c_pad = mat.shape
     r = _pad_to(_cast_row(row, rule), 0, n_pad,
@@ -206,26 +275,37 @@ def greedy_loop(mat, row, mask, k: int, rule: KernelRule, backend=None,
     bn = (plan.loop_block_n if plan is not None else 0) or loop_block_n(
         n_pad, c_pad, mat.dtype.itemsize)
     assert bn, "greedy_loop called without a feasible streaming plan"
-    new_row, bests, gains_ = greedy_loop_pallas(mat, r, mk, k, rule,
-                                                block_n=bn,
-                                                interpret=(b == "interpret"))
+    quant = isinstance(mat, QuantMatrix)
+    new_row, bests, gains_ = greedy_loop_pallas(
+        mat.q if quant else mat, r, mk, k, rule, block_n=bn,
+        interpret=(b == "interpret"),
+        scale=mat.scale if quant else None)
     return new_row[:n], bests, gains_
 
 
 def greedy_loop_resident(ground, cands, row, mask, k: int,
-                         rule: KernelRule, backend=None):
+                         rule: KernelRule, backend=None,
+                         cache_dtype: str = "float32"):
     """RESIDENT megakernel tier: matrix built ON-CHIP + all k steps, one
     dispatch total — the accumulation-node fast path.
 
     Feature rules: ground (N, D) evaluation rows, cands (C, D); bitmap
     rules: ground ignored, cands (C, W) bitmaps (N = W). row: (n,) state,
-    mask: (c,) candidate mask. Returns as `greedy_loop`. Callers gate via
-    select_engine returning 'mega_resident'.
+    mask: (c,) candidate mask. `cache_dtype` is the plan's storage dtype:
+    'int8'/'bfloat16' make the kernel round its on-chip matrix to that
+    storage (the quantized-residency ceiling of plans.resident_fits),
+    matching the HBM-cached tiers' rounding exactly. Returns as
+    `greedy_loop`. Callers gate via select_engine returning
+    'mega_resident'.
     """
     b = _backend(backend)
     n, c = row.shape[0], mask.shape[0]
     if b == "ref":
         mat = ref.pairwise(ground, cands, rule)
+        if not rule.is_bitmap and cache_dtype == "int8":
+            mat = rules_mod.dequant(*rules_mod.quantize_rows(mat))
+        elif not rule.is_bitmap and cache_dtype == "bfloat16":
+            mat = mat.astype(jnp.bfloat16).astype(F32)
         return ref.greedy_loop(mat, _cast_row(row, rule),
                                mask.astype(F32), k, rule)
     if rule.is_bitmap:
@@ -241,7 +321,8 @@ def greedy_loop_resident(ground, cands, row, mask, k: int,
                     value=_row_pad_value(rule)).reshape(1, n_pad)
     mk = _pad_to(mask.astype(F32), 0, 128).reshape(1, c_pad)
     new_row, bests, gains_ = greedy_loop_resident_pallas(
-        g, cd, r, mk, k, rule, interpret=(b == "interpret"))
+        g, cd, r, mk, k, rule, interpret=(b == "interpret"),
+        cache_dtype=cache_dtype, logical_n=n, logical_c=c)
     return new_row[:n], bests, gains_
 
 
@@ -287,7 +368,10 @@ def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
     counts (L,), admits (L, B) bool, expos (L,), m_new (), expired (L,)
     bool). ``plan``: the stream_plan dict, threaded through so the gate
     is not re-derived per batch; a non-kernel plan (or None) routes to
-    the jnp oracle.
+    the jnp oracle. A plan dtype of 'int8' (REPRO_FUSED_CACHE_DTYPE
+    forced) stores the fixed ground features per-row-quantized — the
+    kernel rescale-accumulates on-chip, and the oracle sees identically
+    ROUNDED features, so admissions stay bit-identical across backends.
     """
     from repro.kernels.stream_filter import stream_filter_pallas
     bk = _backend(backend)
@@ -297,7 +381,11 @@ def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
     plan = plan if plan is not None else stream_plan(n, l, b, d,
                                                      backend=backend,
                                                      rule=rule)
+    quant = (not rule.is_bitmap and plan is not None
+             and plan.get("dtype") == "int8")
     if bk == "ref" or plan is None or plan.get("tier") != "kernel":
+        if quant:
+            ground = _quantized_ground(ground.astype(F32))[2]
         mat = ref.pairwise(ground, batch, rule)
         rows_, values_, counts_, admits, expos_, m_new, expired = \
             ref.stream_sieve(mat, _cast_row(row0, rule),
@@ -321,6 +409,9 @@ def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
         bt = _pad_to(_pad_to(batch, 0, 128, bucket=False), 1, 128,
                      bucket=False)
         n_pad = g.shape[0]
+    gscale = None
+    if quant:
+        g, gscale, _ = _quantized_ground(g.astype(F32))
     r = _pad_to(_cast_row(rows, rule), 1, n_pad, value=pad_val,
                 bucket=False)
     r0 = _pad_to(_cast_row(row0, rule), 0, n_pad, value=pad_val,
@@ -332,7 +423,8 @@ def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
     bv = _pad_to(bvalid.astype(F32).reshape(1, b), 1, 128, bucket=False)
     rows_o, vals_o, cnt_o, admits, expos_o, m_o, expired = \
         stream_filter_pallas(g, bt, r, r0, vals, cnt, exp_, m_, bv, k,
-                             eps_log, rule, interpret=(bk == "interpret"))
+                             eps_log, rule, interpret=(bk == "interpret"),
+                             gscale=gscale)
     return (rows_o[:, :n], vals_o[:, 0], cnt_o[:, 0], admits[:, :b] > 0,
             expos_o[:, 0], m_o[0, 0], expired[:, 0] > 0)
 
@@ -344,9 +436,17 @@ def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
 
 def apply_column(mat, row, idx, rule: KernelRule):
     """Fold column `idx` of the cached matrix into the state row (flush of
-    the deferred final-step update); idx < 0 is a no-op. Pure jnp — O(N)."""
-    col = lax.dynamic_slice_in_dim(mat, jnp.maximum(idx, 0), 1,
-                                   axis=1)[: row.shape[0], 0]
+    the deferred final-step update); idx < 0 is a no-op. Pure jnp — O(N).
+    QuantMatrix caches rescale just the sliced column (same elementwise
+    product as the in-kernel dequant — bit-identical values)."""
+    if isinstance(mat, QuantMatrix):
+        n = row.shape[0]
+        colq = lax.dynamic_slice_in_dim(mat.q, jnp.maximum(idx, 0), 1,
+                                        axis=1)[:n, 0]
+        col = colq.astype(F32) * mat.scale[0, :n]
+    else:
+        col = lax.dynamic_slice_in_dim(mat, jnp.maximum(idx, 0), 1,
+                                       axis=1)[: row.shape[0], 0]
     upd = rules_mod.fold_cols(row, col, rule)
     return jnp.where(idx >= 0, upd, row)
 
@@ -358,6 +458,7 @@ def masked_col_reduce(mat, col_valid, row, rule: KernelRule):
     union, and the saturated add telescopes — min(cap, min(cap, r+a)+b) ≡
     min(cap, r+a+b) for a, b ≥ 0."""
     n, c = row.shape[0], col_valid.shape[0]
+    mat = _dequant_mat(mat)
     sub = mat[:n, :c]
     if rule.fold == "or":
         masked = jnp.where(col_valid[None, :], sub, jnp.uint32(0))

@@ -173,6 +173,45 @@ def masked_argmax(gains, mask):
 
 
 # ---------------------------------------------------------------------------
+# int8 quantized storage (per-row f32 scale, f32 rescale-accumulate)
+# ---------------------------------------------------------------------------
+
+# quantized dist/dot entries live on a symmetric per-ground-row grid:
+# scale_x = max_c |M[x, c]| / 127, q = round(M / scale) clipped to ±127.
+# Gains accumulate in f32 AFTER the in-kernel rescale (dequant), so the
+# selection algebra above never sees int8 — only rounded f32 values. A
+# zero row (all-pad or genuinely empty) keeps scale = 1 so dequant is an
+# exact 0 and padding stays gain-neutral.
+_QMAX = 127.0
+
+
+def cache_itemsize(dtype: str) -> int:
+    """Bytes per cached-matrix entry for a storage dtype name — the ONE
+    mapping the planner's budget gates use (the itemsize fix: bf16/int8
+    caches must not be budgeted as if they were f32)."""
+    return {"float32": 4, "uint32": 4, "bfloat16": 2, "int8": 1}[dtype]
+
+
+def quantize_rows(mat):
+    """(N, C) f32 matrix → (q int8 (N, C), scale f32 (1, N)) with a
+    symmetric per-row scale. Rows of pure zeros get scale 1 (exact
+    round-trip of the zero padding)."""
+    m = mat.astype(F32)
+    amax = jnp.max(jnp.abs(m), axis=1, keepdims=True)          # (N, 1)
+    scale = jnp.where(amax > 0.0, amax / _QMAX, 1.0)
+    q = jnp.clip(jnp.round(m / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    return q, scale.T                                          # (1, N)
+
+
+def dequant(q, scale):
+    """(N, C) int8 + (1, N) per-row scale → (N, C) f32. Pure jnp on
+    values, so it traces identically inside kernel bodies (the in-kernel
+    rescale-accumulate) and in the oracles — int8 selections cannot
+    drift between backends."""
+    return q.astype(F32) * scale.T
+
+
+# ---------------------------------------------------------------------------
 # matrix construction
 # ---------------------------------------------------------------------------
 

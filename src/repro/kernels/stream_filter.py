@@ -50,13 +50,13 @@ from repro.kernels.ref import sieve_admit, sieve_reanchor
 F32 = jnp.float32
 
 
-def _kernel(ground_ref, batch_ref, rows_ref, row0_ref, values_ref,
-            counts_ref, expos_ref, m_ref, bvalid_ref,
-            rowsout_ref, valout_ref, cntout_ref, admit_ref, expoout_ref,
-            mout_ref, expired_ref, *,
-            k: int, eps_log: float, rule: KernelRule):
+def _body(g, batch_ref, rows_ref, row0_ref, values_ref,
+          counts_ref, expos_ref, m_ref, bvalid_ref,
+          rowsout_ref, valout_ref, cntout_ref, admit_ref, expoout_ref,
+          mout_ref, expired_ref, *,
+          k: int, eps_log: float, rule: KernelRule):
     bt = batch_ref[...]                                   # (B, D) | (B, W)
-    mat = R.matrix_block(ground_ref[...], bt, rule)       # (N, B), on-chip
+    mat = R.matrix_block(g, bt, rule)                     # (N, B), on-chip
     row0 = row0_ref[...]                                  # (1, N)
     bv = bvalid_ref[...].astype(F32)                      # (1, B)
     nb = bt.shape[0]
@@ -95,6 +95,19 @@ def _kernel(ground_ref, batch_ref, rows_ref, row0_ref, values_ref,
     expired_ref[...] = expired.astype(F32)
 
 
+def _kernel(ground_ref, *refs, k, eps_log, rule):
+    _body(ground_ref[...], *refs, k=k, eps_log=eps_log, rule=rule)
+
+
+def _kernel_quant(ground_ref, gscale_ref, *refs, k, eps_log, rule):
+    # int8 ground features (stream_plan dtype='int8'): the resident
+    # evaluation set is stored at 1 byte/entry and rescaled against its
+    # (1, N) per-row scales on-chip before the shared pairwise op
+    # (arrivals stay f32)
+    g = R.dequant(ground_ref[...], gscale_ref[...])
+    _body(g, *refs, k=k, eps_log=eps_log, rule=rule)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "eps_log", "rule",
                                              "interpret"))
 def stream_filter_pallas(ground: jax.Array, batch: jax.Array,
@@ -102,14 +115,17 @@ def stream_filter_pallas(ground: jax.Array, batch: jax.Array,
                          values: jax.Array, counts: jax.Array,
                          expos: jax.Array, m_max: jax.Array,
                          bvalid: jax.Array, k: int, eps_log: float,
-                         rule: KernelRule, interpret: bool = False):
+                         rule: KernelRule, interpret: bool = False,
+                         gscale=None):
     """Feature rules: ground (N, D), batch (B, D) arrivals. Bitmap rules:
     ground is an ignored placeholder and batch the (B, W) arrival bitmaps
     (N = W). rows: (L, N) level states in the rule's row dtype, row0:
     (1, N) empty-solution row, values: (L, 1) f32 raw, counts / expos:
     (L, 1) i32, m_max: (1, 1) f32, bvalid: (1, B) 0/1 f32. L must be a
     sublane multiple (SieveStreamer rounds its level count up); N/B/D
-    padded by the ops.py wrapper (arrival pads carry bvalid = 0).
+    padded by the ops.py wrapper (arrival pads carry bvalid = 0). When
+    `gscale` (1, N) f32 is given, `ground` is int8 per-row-quantized
+    storage and the kernel rescales it to f32 on-chip.
 
     Returns (rows (L, N), values (L, 1), counts (L, 1) i32, admits
     (L, B) f32 0/1, expos (L, 1) i32, m_new (1, 1) f32, expired (L, 1)
@@ -124,8 +140,15 @@ def stream_filter_pallas(ground: jax.Array, batch: jax.Array,
     assert row0.shape == (1, n) and values.shape == (l, 1)
     assert counts.shape == (l, 1) and expos.shape == (l, 1)
     assert m_max.shape == (1, 1) and bvalid.shape == (1, nb)
+    kernel = _kernel
+    operands = [ground, batch, rows, row0, values, counts, expos, m_max,
+                bvalid]
+    if gscale is not None:
+        assert gscale.shape == (1, ground.shape[0]), gscale.shape
+        operands.insert(1, gscale)
+        kernel = _kernel_quant
     return pl.pallas_call(
-        functools.partial(_kernel, k=k, eps_log=eps_log, rule=rule),
+        functools.partial(kernel, k=k, eps_log=eps_log, rule=rule),
         out_shape=[
             jax.ShapeDtypeStruct((l, n), rule.dtype),
             jax.ShapeDtypeStruct((l, 1), F32),
@@ -136,4 +159,4 @@ def stream_filter_pallas(ground: jax.Array, batch: jax.Array,
             jax.ShapeDtypeStruct((l, 1), F32),
         ],
         interpret=interpret,
-    )(ground, batch, rows, row0, values, counts, expos, m_max, bvalid)
+    )(*operands)

@@ -15,10 +15,18 @@ each call rather than caching at import):
   REPRO_KERNEL_BACKEND    'auto' | 'pallas' | 'interpret' | 'ref'
   REPRO_FUSED_CACHE_MB    HBM budget for the cached (N, C) matrix
   REPRO_FUSED_VMEM_MB     per-block VMEM budget for the fused/loop kernels
-  REPRO_FUSED_CACHE_DTYPE 'auto' | 'f32' | 'bf16' cache storage dtype
+  REPRO_FUSED_CACHE_DTYPE 'auto' | 'f32' | 'bf16' | 'int8' cache storage
+                          dtype (int8 = per-row-scaled quantized storage,
+                          f32 rescale-accumulate in the kernels)
   REPRO_STREAM_VMEM_MB    VMEM budget for the stream-filter kernel
                           (defaults to the fused VMEM budget)
   REPRO_STREAM_BATCH      default arrival batch size for streaming drivers
+  REPRO_AUTOTUNE_CACHE    path to the measured-plan JSON cache written by
+                          launch/autotune.py; plans.select_engine consults
+                          it before the static heuristics. Unset / '' /
+                          'off' disables the lookup (the default — tuned
+                          plans are strictly opt-in so test selections
+                          stay deterministic).
 """
 from __future__ import annotations
 
@@ -43,6 +51,7 @@ FUSED_VMEM_MB_ENV = "REPRO_FUSED_VMEM_MB"
 FUSED_CACHE_DTYPE_ENV = "REPRO_FUSED_CACHE_DTYPE"
 STREAM_VMEM_MB_ENV = "REPRO_STREAM_VMEM_MB"
 STREAM_BATCH_ENV = "REPRO_STREAM_BATCH"
+AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
 _FUSED_CACHE_MB_DEFAULT = 2048.0
 _FUSED_VMEM_MB_DEFAULT = 8.0
@@ -85,9 +94,9 @@ def fused_vmem_mb() -> float:
 
 
 def fused_cache_dtype() -> str:
-    """Cache storage dtype preference: 'auto' | 'f32' | 'bf16'."""
+    """Cache storage dtype preference: 'auto' | 'f32' | 'bf16' | 'int8'."""
     v = os.environ.get(FUSED_CACHE_DTYPE_ENV, "auto").lower()
-    return v if v in ("auto", "f32", "bf16") else "auto"
+    return v if v in ("auto", "f32", "bf16", "int8") else "auto"
 
 
 def stream_vmem_mb() -> float:
@@ -99,3 +108,13 @@ def stream_vmem_mb() -> float:
 def stream_batch() -> int:
     """Default arrival batch size B for the streaming drivers."""
     return max(1, _env_int(STREAM_BATCH_ENV, _STREAM_BATCH_DEFAULT))
+
+
+def autotune_cache_path() -> Optional[str]:
+    """Path of the measured-plan JSON cache (launch/autotune.py), or None
+    when disabled. Opt-in: unset / '' / '0' / 'off' / 'none' all disable
+    the lookup so default runs keep the static-heuristic plans."""
+    v = os.environ.get(AUTOTUNE_CACHE_ENV, "")
+    if v.strip().lower() in ("", "0", "off", "none", "disabled"):
+        return None
+    return v

@@ -1,0 +1,159 @@
+"""Measured-plan autotune cache (DESIGN §Autotune).
+
+The cache is consulted by plans.select_engine BEFORE the static budget
+heuristics, so these tests pin the safety contract: a tuned entry wins
+only when its recorded budget snapshot matches the live knobs and its
+fields validate; a corrupt, stale, version-bumped, or malformed cache
+silently falls back to the heuristics — it can NEVER crash a run or
+smuggle in a dtype the user forced off. The round-trip is deterministic
+(sorted-key JSON, atomic replace), and the end-to-end tuner writes
+entries that reproduce the greedy selection of the static plan.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.greedy import greedy
+from repro.core.objective import make_objective
+from repro.data.synthetic import gen_images
+from repro.kernels import plans, rules
+from repro.launch import autotune
+from repro.runtime import flags
+
+KEY_KW = dict(n=1024, c=1024, d=64, backend="interpret")
+
+
+def _key():
+    return plans.autotune_key(rules.DOT_MAX, **KEY_KW)
+
+
+def _select(requested="auto"):
+    return plans.select_engine(rules.DOT_MAX, KEY_KW["n"], KEY_KW["c"],
+                               KEY_KW["d"], requested=requested,
+                               backend=KEY_KW["backend"])
+
+
+def _entry(tier="resident", dtype="int8", bn=0, bl=0, budgets=None):
+    return {"tier": tier, "block_n": bn, "loop_block_n": bl,
+            "dtype": dtype,
+            "budgets": budgets or plans.budget_snapshot()}
+
+
+@pytest.fixture
+def cache_path(tmp_path, monkeypatch):
+    path = tmp_path / "at" / "plans.json"
+    monkeypatch.setenv(flags.AUTOTUNE_CACHE_ENV, str(path))
+    return path
+
+
+def test_cache_off_by_default(monkeypatch):
+    monkeypatch.delenv(flags.AUTOTUNE_CACHE_ENV, raising=False)
+    assert flags.autotune_cache_path() is None
+    assert plans.load_autotune_cache() == {}
+
+
+def test_round_trip_deterministic(cache_path):
+    """save → select_engine returns the tuned plan; resaving identical
+    entries produces identical bytes (sorted keys, atomic replace)."""
+    plans.save_autotune_cache({_key(): _entry()})
+    p = _select()
+    assert (p.engine, p.tier, p.dtype) == ("mega_resident", "resident",
+                                           "int8")
+    blob = cache_path.read_bytes()
+    plans.save_autotune_cache({_key(): _entry()})
+    assert cache_path.read_bytes() == blob
+    # merge keeps unrelated entries
+    other = plans.autotune_key(rules.DIST_MIN, 256, 256, 32, "interpret")
+    plans.save_autotune_cache({other: _entry(tier="streaming",
+                                             dtype="float32", bn=256,
+                                             bl=256)})
+    entries = plans.load_autotune_cache()
+    assert set(entries) == {_key(), other}
+
+
+def test_corrupt_cache_falls_back_without_crashing(cache_path):
+    plans.save_autotune_cache({_key(): _entry()})
+    assert _select().engine == "mega_resident"
+    cache_path.write_text("{this is not json")
+    p = _select()                          # heuristics take over
+    assert p.dtype == "float32" and p.engine in ("mega_stream", "fused")
+
+
+def test_version_mismatch_ignored(cache_path):
+    cache_path.parent.mkdir(parents=True, exist_ok=True)
+    cache_path.write_text(json.dumps(
+        {"version": plans.AUTOTUNE_VERSION + 1,
+         "entries": {_key(): _entry()}}))
+    assert plans.load_autotune_cache() == {}
+    assert _select().dtype == "float32"
+
+
+def test_stale_budget_snapshot_ignored(cache_path, monkeypatch):
+    plans.save_autotune_cache({_key(): _entry()})
+    assert _select().engine == "mega_resident"
+    # entry was measured under vmem_mb=8; the live knob moved on — the
+    # int8 entry must be ignored and the f32 heuristics take over
+    monkeypatch.setenv("REPRO_FUSED_VMEM_MB", "16")
+    assert _select().dtype == "float32"
+
+
+def test_malformed_entries_ignored(cache_path):
+    bad = {"tier": "warp", "block_n": 1, "loop_block_n": 1,
+           "dtype": "int8", "budgets": plans.budget_snapshot()}
+    for e in (bad,
+              _entry(dtype="int4"),
+              _entry(tier="streaming", bn=0, bl=0),       # missing blocks
+              _entry(tier="streaming", bn="x", bl=256),
+              "not-a-dict"):
+        plans.save_autotune_cache({_key(): e})
+        assert _select().dtype == "float32", e
+
+
+def test_forced_dtype_conflict_rejects_entry(cache_path, monkeypatch):
+    plans.save_autotune_cache({_key(): _entry(dtype="int8")})
+    monkeypatch.setenv("REPRO_FUSED_CACHE_DTYPE", "f32")
+    assert _select().dtype == "float32"
+    monkeypatch.setenv("REPRO_FUSED_CACHE_DTYPE", "int8")
+    assert _select().dtype == "int8"
+
+
+def test_tuned_step_entry_wins(cache_path):
+    plans.save_autotune_cache(
+        {_key(): {"tier": "step", "budgets": plans.budget_snapshot()}})
+    assert _select().engine == "step"
+
+
+def test_plan_override_outranks_cache(cache_path):
+    plans.save_autotune_cache({_key(): _entry(dtype="int8")})
+    with plans.plan_override({"tier": "streaming", "block_n": 256,
+                              "loop_block_n": 256, "dtype": "float32"}):
+        p = _select()
+    assert (p.engine, p.dtype) == ("mega_stream", "float32")
+    assert _select().dtype == "int8"       # restored on exit
+
+
+def test_tuner_end_to_end_preserves_selection(cache_path):
+    """The real tuner on a tiny pool: writes a usable cache entry AND
+    the greedy run under the tuned cache picks the same ids as the
+    untuned run (the tuner's identity gate, observed end to end)."""
+    n, d, k = 64, 32, 4
+    entries = autotune.tune(["facility"], [(n, d, k)],
+                            backend="interpret", reps=1,
+                            dtypes=("float32", "int8"),
+                            blocks_per_tier=1, verbose=False)
+    assert cache_path.exists() and len(entries) == 1
+    (key, e), = entries.items()
+    assert e["budgets"] == plans.budget_snapshot()
+    assert e["speedup"] >= 1.0             # winner never slower
+    pay = jnp.asarray(gen_images(n, d, classes=8, seed=0))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    valid = jnp.ones(n, bool)
+    obj = make_objective("facility", backend="interpret")
+    tuned = greedy(obj, ids, pay, valid, k, engine="auto")
+    with plans.plan_override(dict(autotune.STEP_PLAN)):
+        base = greedy(obj, ids, pay, valid, k, engine="auto")
+    np.testing.assert_array_equal(np.asarray(tuned.ids),
+                                  np.asarray(base.ids))

@@ -204,15 +204,21 @@ def test_plan_vmem_squeeze_demotes_tier(monkeypatch):
                           backend=kw["backend"]) is None
 
 
-def test_plan_cache_squeeze_switches_to_bf16_then_fallback(monkeypatch):
-    n = c = 4096                    # padded f32 cache: 64 MB, bf16: 32 MB
+def test_plan_cache_squeeze_switches_to_bf16_then_int8_then_fallback(
+        monkeypatch):
+    # padded cache at n=c=4096: f32 64 MB, bf16 32 MB, int8 16 MB — the
+    # ladder descends one rung per squeeze before the memory-capped path
+    n = c = 4096
     assert ops.fused_plan(n, c)["dtype"] == "float32"
     monkeypatch.setenv("REPRO_FUSED_CACHE_MB", "48")
     plan = ops.fused_plan(n, c)
     assert plan["dtype"] == "bfloat16"          # bf16 doubles the headroom
     monkeypatch.setenv("REPRO_FUSED_CACHE_MB", "16")
+    plan = ops.fused_plan(n, c)
+    assert plan["dtype"] == "int8"              # int8 doubles it again
+    monkeypatch.setenv("REPRO_FUSED_CACHE_MB", "8")
     assert ops.fused_plan(n, c) is None         # paper's memory-capped path
-    # forcing f32 refuses the bf16 escape hatch
+    # forcing f32 refuses both sub-f32 escape hatches
     monkeypatch.setenv("REPRO_FUSED_CACHE_MB", "48")
     monkeypatch.setenv("REPRO_FUSED_CACHE_DTYPE", "f32")
     assert ops.fused_plan(n, c) is None
@@ -221,6 +227,63 @@ def test_plan_cache_squeeze_switches_to_bf16_then_fallback(monkeypatch):
 def test_plan_forced_bf16(monkeypatch):
     monkeypatch.setenv("REPRO_FUSED_CACHE_DTYPE", "bf16")
     assert ops.fused_plan(1024, 1024)["dtype"] == "bfloat16"
+
+
+def test_plan_forced_int8(monkeypatch):
+    monkeypatch.setenv("REPRO_FUSED_CACHE_DTYPE", "int8")
+    assert ops.fused_plan(1024, 1024)["dtype"] == "int8"
+
+
+def test_block_gates_widen_with_cheaper_storage(monkeypatch):
+    """Satellite (itemsize bug): the VMEM block gates used to hardcode
+    itemsize=4, so sub-f32 caches never earned wider blocks. At a tight
+    budget the bf16 slab must now admit a wider row block than f32."""
+    from repro.kernels import plans
+    monkeypatch.setenv("REPRO_FUSED_VMEM_MB", "1")
+    n, c = 4096, 4096
+    assert plans.fused_block_n(n, c, itemsize=2) \
+        > plans.fused_block_n(n, c, itemsize=4) > 0
+    assert plans.loop_block_n(n, c, itemsize=2) \
+        > plans.loop_block_n(n, c, itemsize=4) > 0
+
+
+def test_resident_int8_raises_n_ceiling_vs_bf16():
+    """ISSUE 7 acceptance: at the fixed default VMEM budget the int8
+    resident model must admit ≥1.8× the ground rows of bf16 (matrix-term
+    dominated regime: c ≫ d)."""
+    from repro.kernels import plans
+    c_pad, d_pad = 4096, 128
+
+    def ceiling(itemsize):
+        lo, hi = 8, 1 << 22
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if plans.resident_fits(mid, c_pad, d_pad, itemsize=itemsize):
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo
+
+    assert ceiling(1) >= 1.8 * ceiling(2)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_mega_int8_cache_parity(backend, monkeypatch):
+    """int8 cache storage (per-row scales, f32 rescale-accumulate): the
+    fused scan and the megakernel read the SAME quantized matrix, so
+    their selections must stay bit-identical; the identity gate vs the
+    f32 run lives in the conformance suite."""
+    monkeypatch.setenv("REPRO_FUSED_CACHE_DTYPE", "int8")
+    monkeypatch.setenv("REPRO_FUSED_VMEM_MB", "1")   # force streaming
+    ids, x, valid = _points()
+    obj = make_objective("facility", backend=backend)
+    fused = greedy(obj, ids, x, valid, 12, engine="fused")
+    mega = greedy(obj, ids, x, valid, 12, engine="mega")
+    _assert_same_selection(fused, mega, value_tol=1e-4)
+    monkeypatch.delenv("REPRO_FUSED_CACHE_DTYPE")
+    f32 = greedy(obj, ids, x, valid, 12, engine="mega")
+    np.testing.assert_allclose(float(mega.value), float(f32.value),
+                               rtol=2e-2)
 
 
 @pytest.mark.parametrize("backend", ["ref", "interpret"])

@@ -88,6 +88,32 @@ def test_interpret_matches_ref_selection(name):
                                   np.asarray(sols["interpret"].ids))
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", OBJECTIVES)
+def test_int8_cache_selection_identity(name, backend, monkeypatch):
+    """Forced int8 cache storage (ISSUE 7) must pick the SAME element
+    ids as the f32 run on every engine tier — the quantization parity
+    gate is selection identity, not bitwise gains. The pool (seed=7) is
+    margin-robust: every greedy pick's gain margin exceeds the ≤1/254
+    per-row rounding, verified across all engines/backends. Near-tie
+    pools may legitimately flip a pick under quantization — those are
+    gated by the autotuner's measurement-time identity check, which
+    REJECTS any candidate whose selection drifts (launch/autotune.py)."""
+    if _is_bitmap(name):
+        pytest.skip("bitmap rules always store uint32 — nothing to "
+                    "quantize")
+    ids, pay, valid = _pool(name, seed=7)
+    f32 = {e: greedy(_make(name, backend), ids, pay, valid, 10, engine=e)
+           for e in ("step", "fused", "mega")}
+    monkeypatch.setenv("REPRO_FUSED_CACHE_DTYPE", "int8")
+    for e in ("step", "fused", "mega"):
+        q = greedy(_make(name, backend), ids, pay, valid, 10, engine=e)
+        np.testing.assert_array_equal(np.asarray(q.ids),
+                                      np.asarray(f32[e].ids))
+        np.testing.assert_array_equal(np.asarray(q.valid),
+                                      np.asarray(f32[e].valid))
+
+
 @pytest.mark.parametrize("name", OBJECTIVES)
 def test_constraint_branch_parity(name):
     """PartitionMatroid demotes mega → fused scan; selections must match

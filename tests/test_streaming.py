@@ -119,9 +119,9 @@ def test_stream_filter_is_one_dispatch_per_batch():
 
 def test_stream_plan_vmem_gate(monkeypatch):
     assert ops.stream_plan(256, 32, 128, 64, backend="ref") == {
-        "tier": "ref"}
+        "tier": "ref", "dtype": "float32"}
     plan = ops.stream_plan(256, 32, 128, 64, backend="interpret")
-    assert plan == {"tier": "kernel"}
+    assert plan == {"tier": "kernel", "dtype": "float32"}
     monkeypatch.setenv("REPRO_STREAM_VMEM_MB", "0.05")
     assert ops.stream_plan(256, 32, 128, 64, backend="interpret") is None
     # squeezed plan must still produce correct (oracle-path) selections
