@@ -1,0 +1,150 @@
+"""Serving-engine perf: admission batching vs one-at-a-time queries.
+
+Emits ``benchmarks/BENCH_serve.json`` with, per admission-cap B:
+queries/s over a fixed mixed-tenant workload (4 objectives × 2 pool
+sizes × heterogeneous k, interleaved so the admission batcher has to
+regroup them), p50/p99 service latency per query-size bucket, the mean
+admitted batch size actually achieved, and the jaxpr-counted pallas
+dispatches per batch (a separate interpret-backend arm, since the wall
+sweep runs on the 'ref' CPU floor by default — bench_selection.py's
+convention). The acceptance claim is the throughput column: queries/s
+at the largest admission cap must exceed cap=1, because B co-batched
+queries cost one vmapped megakernel dispatch instead of B solo drives.
+On the single-core CPU floor the win is ONLY the amortized per-drive
+overhead (compute is serial either way), so mid-cap points can wobble;
+on real accelerators the dispatch-count column is the load-bearing
+measurement and it is exact: one pallas_call per admitted batch.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import time
+
+import numpy as np
+
+from repro.launch.qserve import _pool
+from repro.serving import Query, QueryEngine, ServeMetrics
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+
+OBJS = ("facility", "kmedoid", "satcover", "coverage")
+FULL = dict(sizes=(128, 256), per_combo=16, caps=(1, 2, 4, 8, 16),
+            k=12, d=32, universe=384, reps=3)
+SMOKE = dict(sizes=(96,), per_combo=2, caps=(1, 2, 4),
+             k=8, d=16, universe=192, reps=1)
+
+
+def _workload(cfg, seed=0):
+    # k is FIXED across the sweep: the throughput column isolates the
+    # admission-batching effect (per-query work constant while B varies).
+    # Heterogeneous-k batches pay bucket_len(max k) masked steps for the
+    # whole group — that cost is a per-workload tax, measured instead by
+    # the bit-parity suite which mixes k=5/9/12 in one batch.
+    specs = []
+    for n in cfg["sizes"]:
+        for name in OBJS:
+            for j in range(cfg["per_combo"]):
+                specs.append((name, n, cfg["k"], seed + j))
+    random.Random(seed).shuffle(specs)     # interleave tenants/objectives
+    return specs
+
+
+def _queries(specs, cfg):
+    qs = []
+    for name, n, k, seed in specs:
+        ids, pay, valid = _pool(name, n, cfg["d"], cfg["universe"], seed)
+        qs.append(Query(name, k, ids, pay, valid, tenant=f"n{n}",
+                        universe=cfg["universe"] if name == "coverage"
+                        else 0))
+    return qs
+
+
+def sweep(cfg, backend=None, seed=0):
+    """queries/s and per-size latency percentiles vs admission cap B.
+
+    Each cap gets a warmup pass (compiles every executor shape bucket)
+    and a timed pass on a fresh ServeMetrics, so the sweep compares
+    steady-state serving, not jit compilation."""
+    specs = _workload(cfg, seed)
+    rows = {}
+    for cap in cfg["caps"]:
+        eng = QueryEngine(backend=backend, max_batch=cap,
+                          queue_cap=len(specs) + 1)
+        for q in _queries(specs, cfg):
+            eng.submit(q)
+        eng.drain()                       # warmup
+        wall = float("inf")
+        for _ in range(cfg["reps"]):     # best-of-reps, steady-state
+            eng.metrics = ServeMetrics()
+            qs = _queries(specs, cfg)
+            t0 = time.time()
+            for q in qs:
+                eng.submit(q)
+            res = eng.drain()
+            wall = min(wall, time.time() - t0)
+        snap = eng.metrics.snapshot()
+        sizes = [b["size"] for b in eng.metrics.batches]
+        rows[str(cap)] = dict(
+            queries=len(res),
+            wall_s=round(wall, 4),
+            queries_per_s=round(len(res) / max(wall, 1e-9), 1),
+            batches=len(sizes),
+            mean_admitted=round(float(np.mean(sizes)), 2),
+            per_size={t: dict(p50_ms=round(s["p50_ms"], 2),
+                              p99_ms=round(s["p99_ms"], 2),
+                              served=s["completed"])
+                      for t, s in snap["tenants"].items()},
+        )
+    return rows
+
+
+def dispatch_arm(cfg, b=4, n=96):
+    """Measured dispatches per admitted batch on the interpret backend —
+    the 1-dispatch-per-batch claim, counted off the executor jaxpr."""
+    eng = QueryEngine(backend="interpret", max_batch=b)
+    for seed in range(b):
+        ids, pay, valid = _pool("facility", n, cfg["d"], cfg["universe"],
+                                seed)
+        eng.submit(Query("facility", 5 + seed, ids, pay, valid,
+                         tenant="disp"))
+    eng.drain()
+    return [bt["dispatches"] for bt in eng.metrics.batches]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    help="wall-sweep backend (default: planner's choice)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    cfg = SMOKE if args.smoke else FULL
+    rows = sweep(cfg, backend=args.backend, seed=args.seed)
+    disp = dispatch_arm(cfg, b=2 if args.smoke else 4,
+                        n=cfg["sizes"][0])
+    import jax
+    results = dict(config=dict(cfg, backend=args.backend,
+                               smoke=args.smoke,
+                               device=jax.default_backend()),
+                   by_admission_cap=rows,
+                   dispatches_per_batch_interpret=disp)
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+    print("cap,queries/s,mean_admitted,batches,p50_ms(by size)")
+    for cap, r in rows.items():
+        p50s = {t: s["p50_ms"] for t, s in r["per_size"].items()}
+        print(f"{cap},{r['queries_per_s']},{r['mean_admitted']},"
+              f"{r['batches']},{p50s}")
+    print(f"dispatches/batch (interpret): {disp}")
+    print(f"wrote {OUT_PATH}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

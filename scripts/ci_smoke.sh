@@ -81,4 +81,17 @@ echo "== fault tolerance (supervised runtime, 8-device mesh) =="
 python -m pytest -q tests/test_fault_tolerance.py
 python -m repro.launch.faultrun --smoke --mesh --lanes 8 --branching 2
 
+echo "== serving engine (multi-tenant batched queries, interpret) =="
+# subsystem tests, then the CLI gate: N mixed queries in → N bit-correct
+# results out with ONE measured pallas dispatch per admitted batch, plus
+# queue backpressure and a session-stream parity check
+python -m pytest -q tests/test_serving.py
+python -m repro.launch.qserve --smoke
+# serving throughput artifact: the smoke sweep must emit BENCH_serve.json
+python benchmarks/bench_serve.py --smoke
+test -s benchmarks/BENCH_serve.json || {
+    echo "FAIL: BENCH_serve.json was not written"
+    exit 1
+}
+
 echo "CI smoke OK"

@@ -202,6 +202,53 @@ class RuleObjective:
         return (dataclasses.replace(state, row=row), bests,
                 gains / state.n_eff)
 
+    # -- batched serving (many queries, one dispatch) ------------------------
+
+    def megakernel_loop_batched(self, payloads, valid, ks, k_max: int,
+                                plan: Optional[EnginePlan] = None,
+                                logical=None):
+        """B rule-compatible queries as ONE vmapped resident dispatch
+        (DESIGN §Serving): the query axis becomes a batch grid dim of the
+        SAME pallas_call, so an admitted batch costs one kernel launch.
+
+        payloads: (B, C, …) query pools pre-padded to a shared bucket
+        shape (pad candidates carry zero payloads + valid=False); valid:
+        (B, C); ks: (B,) per-query step budgets ≤ k_max (heterogeneous k
+        — steps ≥ ks[i] are masked inside the kernel, so each query is
+        bit-identical to its solo k=ks[i] run); logical: optional (B, 2)
+        i32 per-query (ground-rows, candidates) logical extents bounding
+        the sub-f32 rounding (defaults to the padded shape — correct
+        when inputs are not pre-padded). Returns (stacked RuleStates,
+        bests (B, k_max) i32 with −1 = rejected/masked, normalized gains
+        (B, k_max)), or None when the planner refuses the resident tier
+        — callers run each query solo (identical selections)."""
+        bsz, c = valid.shape
+        if self.rule.is_bitmap:
+            n, d = self.words, None
+        else:
+            n, d = c, payloads.shape[-1]
+        if plan is None:
+            plan = plans.select_engine(self.rule, n, c, d,
+                                       requested="mega",
+                                       backend=self.backend)
+        if plan.engine != "mega_resident":
+            return None
+        if logical is None:
+            logical = jnp.broadcast_to(
+                jnp.asarray([n, c], jnp.int32), (bsz, 2))
+
+        def one(pay, val, kq, lim):
+            state = self.init_state(pay, val)
+            row, bests, gains = ops.greedy_loop_resident(
+                state.ground, pay, state.row, val, k_max, self.rule,
+                backend=self.backend, cache_dtype=plan.dtype,
+                kq=kq, logical=(lim[0], lim[1]))
+            return (dataclasses.replace(state, row=row), bests,
+                    gains / state.n_eff)
+
+        return jax.vmap(one)(payloads, valid,
+                             jnp.asarray(ks, jnp.int32), logical)
+
     # -- batched replay ------------------------------------------------------
 
     def replay_batch(self, state: RuleState, payloads, valid) -> RuleState:

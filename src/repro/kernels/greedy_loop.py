@@ -184,10 +184,14 @@ def greedy_loop_pallas(mat: jax.Array, row: jax.Array, mask: jax.Array,
     return row_out[0], best[:k, 0], gain[:k, 0]
 
 
-def _resident_kernel(ground_ref, cands_ref, row_ref, mask_ref,
+def _resident_kernel(ground_ref, cands_ref, row_ref, mask_ref, ctl_ref,
                      rowout_ref, best_ref, gain_ref, *,
-                     k: int, rule: KernelRule, cache_dtype: str,
-                     logical_n: int, logical_c: int):
+                     k: int, rule: KernelRule, cache_dtype: str):
+    # ctl: (1, 3) i32 [kq, logical_n, logical_c] — TRACED, not static, so
+    # the serving engine can vmap this kernel over a query axis with
+    # per-query step budgets and logical extents (DESIGN §Serving) while
+    # solo calls share one compile-cache entry across logical shapes
+    kq = ctl_ref[0, 0]
     m = R.matrix_block(ground_ref[...], cands_ref[...], rule)  # (N, C)
     if not rule.is_bitmap and cache_dtype == "int8":
         # quantized residency: the matrix the loop sees is the int8
@@ -197,7 +201,8 @@ def _resident_kernel(ground_ref, cands_ref, row_ref, mask_ref,
         # logical columns (bit-parity with the ref oracle's logical build)
         rows = jax.lax.broadcasted_iota(jnp.int32, m.shape, 0)
         cols = jax.lax.broadcasted_iota(jnp.int32, m.shape, 1)
-        m = jnp.where((rows < logical_n) & (cols < logical_c), m, 0.0)
+        m = jnp.where((rows < ctl_ref[0, 1]) & (cols < ctl_ref[0, 2]),
+                      m, 0.0)
         m = R.dequant(*R.quantize_rows(m))
     elif not rule.is_bitmap and cache_dtype == "bfloat16":
         m = m.astype(jnp.bfloat16).astype(F32)
@@ -211,10 +216,15 @@ def _resident_kernel(ground_ref, cands_ref, row_ref, mask_ref,
                                     (m.shape[0], 1)).T  # (1, N)
         row = R.fold_winner(row, col, prev, rule)
         best, mx = R.masked_argmax(R.partial_gains(row, m, rule), mask)
-        accept = mx > 0.0
+        # masked steps (s ≥ kq): the deferred fold above still flushed the
+        # winner of step kq−1 (matching a solo run's final flush), but no
+        # further element is taken — bests/gains beyond kq stay −1/0 and
+        # the state freezes, so a k_max-padded query is bit-identical to
+        # its solo k=kq run
+        accept = (mx > 0.0) & (s < kq)
         best_i = jnp.where(accept, best, jnp.int32(-1))
         mask = jnp.where(accept & (cols == best), 0.0, mask)
-        sel = steps == s
+        sel = (steps == s) & (s < kq)
         return (row, mask, best_i,
                 jnp.where(sel, best_i, bests), jnp.where(sel, mx, gains))
 
@@ -232,13 +242,12 @@ def _resident_kernel(ground_ref, cands_ref, row_ref, mask_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "rule", "interpret",
-                                    "cache_dtype", "logical_n",
-                                    "logical_c"))
+                                    "cache_dtype"))
 def greedy_loop_resident_pallas(ground: jax.Array, cands: jax.Array,
-                                row: jax.Array, mask: jax.Array, k: int,
+                                row: jax.Array, mask: jax.Array,
+                                ctl: jax.Array, k: int,
                                 rule: KernelRule, interpret: bool = False,
-                                cache_dtype: str = "float32",
-                                logical_n: int = 0, logical_c: int = 0):
+                                cache_dtype: str = "float32"):
     """Resident tier: ONE dispatch builds the matrix on-chip and runs all k
     steps. Feature rules: ground (N, D), cands (C, D); bitmap rules:
     ground is an ignored placeholder and cands the (C, W) bitmaps (the
@@ -248,25 +257,32 @@ def greedy_loop_resident_pallas(ground: jax.Array, cands: jax.Array,
     the plan's storage dtype: 'int8'/'bfloat16' round the on-chip matrix
     to exactly what the HBM-cached tiers would store (raising the
     residency ceiling per plans.resident_fits), 'float32'/'uint32' keep
-    the legacy exact build. Returns as greedy_loop_pallas.
+    the legacy exact build.
+
+    ctl: (1, 3) i32 ``[kq, logical_n, logical_c]`` — a TRACED operand
+    (not a static arg): `kq ≤ k` is the per-invocation step budget
+    (steps ≥ kq are masked, so a k-padded call is bit-identical to a
+    solo k=kq run — the serving engine's heterogeneous-k batching),
+    logical_n/logical_c bound the sub-f32 rounding to the logical
+    region. Returns as greedy_loop_pallas.
     """
     n = row.shape[1]
     c = cands.shape[0]
     assert mask.shape == (1, c), (row.shape, mask.shape)
+    assert ctl.shape == (1, 3) and ctl.dtype == jnp.int32, \
+        (ctl.shape, ctl.dtype)
     if rule.is_bitmap:
         assert cands.shape[1] == n, (cands.shape, n)
     else:
         assert ground.shape == (n, cands.shape[1])
     row_out, best, gain = pl.pallas_call(
         functools.partial(_resident_kernel, k=k, rule=rule,
-                          cache_dtype=cache_dtype,
-                          logical_n=logical_n or n,
-                          logical_c=logical_c or c),
+                          cache_dtype=cache_dtype),
         out_shape=[
             jax.ShapeDtypeStruct((1, n), rule.dtype),
             jax.ShapeDtypeStruct((1, k), jnp.int32),
             jax.ShapeDtypeStruct((1, k), F32),
         ],
         interpret=interpret,
-    )(ground, cands, row, mask)
+    )(ground, cands, row, mask, ctl)
     return row_out[0], best[0], gain[0]

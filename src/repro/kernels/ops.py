@@ -285,7 +285,8 @@ def greedy_loop(mat, row, mask, k: int, rule: KernelRule, backend=None,
 
 def greedy_loop_resident(ground, cands, row, mask, k: int,
                          rule: KernelRule, backend=None,
-                         cache_dtype: str = "float32"):
+                         cache_dtype: str = "float32",
+                         kq=None, logical=None):
     """RESIDENT megakernel tier: matrix built ON-CHIP + all k steps, one
     dispatch total — the accumulation-node fast path.
 
@@ -294,20 +295,37 @@ def greedy_loop_resident(ground, cands, row, mask, k: int,
     mask: (c,) candidate mask. `cache_dtype` is the plan's storage dtype:
     'int8'/'bfloat16' make the kernel round its on-chip matrix to that
     storage (the quantized-residency ceiling of plans.resident_fits),
-    matching the HBM-cached tiers' rounding exactly. Returns as
-    `greedy_loop`. Callers gate via select_engine returning
-    'mega_resident'.
+    matching the HBM-cached tiers' rounding exactly.
+
+    ``kq`` (traced scalar, default k): per-invocation step budget — steps
+    ≥ kq are masked inside the loop, so a k-padded call is bit-identical
+    to a solo k=kq run. ``logical``: (n_logical, c_logical) when the
+    INPUTS are already pre-padded (the serving engine stacks queries at
+    their bucket shapes) — bounds the sub-f32 rounding to the logical
+    region so quantization scales match the solo run. Both thread
+    through as TRACED values, which is what makes this wrapper vmappable
+    over a query axis (DESIGN §Serving). Returns as `greedy_loop`.
+    Callers gate via select_engine returning 'mega_resident'.
     """
     b = _backend(backend)
     n, c = row.shape[0], mask.shape[0]
+    ln, lc = logical if logical is not None else (n, c)
+    kq_ = jnp.asarray(k if kq is None else kq, jnp.int32)
     if b == "ref":
         mat = ref.pairwise(ground, cands, rule)
-        if not rule.is_bitmap and cache_dtype == "int8":
-            mat = rules_mod.dequant(*rules_mod.quantize_rows(mat))
-        elif not rule.is_bitmap and cache_dtype == "bfloat16":
-            mat = mat.astype(jnp.bfloat16).astype(F32)
+        if not rule.is_bitmap and cache_dtype in ("int8", "bfloat16"):
+            # zero pad rows/cols before rounding: pre-padded (serving)
+            # and logical (solo) pools must produce identical per-row
+            # int8 scales — a no-op where for solo calls (ln=n, lc=c)
+            rows_i = jnp.arange(mat.shape[0])[:, None]
+            cols_i = jnp.arange(mat.shape[1])[None, :]
+            mat = jnp.where((rows_i < ln) & (cols_i < lc), mat, 0.0)
+            if cache_dtype == "int8":
+                mat = rules_mod.dequant(*rules_mod.quantize_rows(mat))
+            else:
+                mat = mat.astype(jnp.bfloat16).astype(F32)
         return ref.greedy_loop(mat, _cast_row(row, rule),
-                               mask.astype(F32), k, rule)
+                               mask.astype(F32), k, rule, kq=kq_)
     if rule.is_bitmap:
         g = _dummy_ground()
         cd = _pad_to(_pad_to(cands, 0, 128), 1, 128)
@@ -320,21 +338,34 @@ def greedy_loop_resident(ground, cands, row, mask, k: int,
         r = _pad_to(_cast_row(row, rule), 0, RES_TILE_N,
                     value=_row_pad_value(rule)).reshape(1, n_pad)
     mk = _pad_to(mask.astype(F32), 0, 128).reshape(1, c_pad)
+    ctl = jnp.stack([kq_, jnp.asarray(ln, jnp.int32),
+                     jnp.asarray(lc, jnp.int32)]).reshape(1, 3)
     new_row, bests, gains_ = greedy_loop_resident_pallas(
-        g, cd, r, mk, k, rule, interpret=(b == "interpret"),
-        cache_dtype=cache_dtype, logical_n=n, logical_c=c)
+        g, cd, r, mk, ctl, k, rule, interpret=(b == "interpret"),
+        cache_dtype=cache_dtype)
     return new_row[:n], bests, gains_
 
 
 def count_pallas_dispatches(jaxpr) -> int:
-    """Pallas dispatches per execution, statically from a jaxpr: each
-    pallas_call eqn counts once, scan bodies count × trip length. The
-    measured (not modeled) dispatch column of bench_selection.py /
-    bench_streaming.py and the streaming acceptance check (one dispatch
-    per arrival batch)."""
+    """Pallas dispatches per execution, statically from a jaxpr.
+
+    Each pallas_call eqn counts ONCE — including under `jax.vmap`, whose
+    batching rule prepends a batch grid dimension to the SAME pallas_call
+    eqn rather than wrapping it in an outer loop, so a vmapped kernel is
+    genuinely one dispatch. That is the property the serving engine's
+    1-dispatch-per-admitted-batch metric measures (DESIGN §Serving): B
+    queries stacked on a vmap axis over the resident megakernel must
+    count 1 here, while a per-query `lax.map`/scan loop counts B (scan
+    bodies multiply by trip length). Recursion descends into every
+    sub-jaxpr param (scan/while/cond/pjit/custom_* and closed calls), so
+    transformed callees are never silently skipped. The measured (not
+    modeled) dispatch column of bench_selection.py / bench_serve.py and
+    the streaming acceptance check (one dispatch per arrival batch)."""
     total = 0
     for eqn in jaxpr.eqns:
         if eqn.primitive.name == "pallas_call":
+            # the kernel-body jaxpr in params is the dispatch's OWN body —
+            # recursing into it would double-count, so stop here
             total += 1
             continue
         mult = (eqn.params.get("length", 1)

@@ -162,6 +162,27 @@ def loop_block_n(n_pad: int, c_pad: int, itemsize: int = 4) -> int:
     return 0
 
 
+def _resident_need(n_pad: int, c_pad: int, d_pad: Optional[int],
+                   rule: Optional[KernelRule] = None,
+                   itemsize: int = 4) -> Optional[int]:
+    """Bytes of VMEM one resident-tier invocation holds (the working-set
+    model `resident_fits` gates on, and the per-query term `serve_plan`
+    multiplies by B for an admitted serving batch); None when the shape
+    cannot be resident at all (feature rules without a feature dim)."""
+    if rule is not None and rule.is_bitmap:
+        return 4 * (3 * n_pad * c_pad + 4 * c_pad + 4 * n_pad)
+    if d_pad is None:
+        return None
+    if itemsize >= 4:
+        return 4 * (n_pad * d_pad + c_pad * d_pad
+                    + 2 * n_pad * c_pad
+                    + 4 * c_pad + 4 * n_pad)
+    return (4 * (n_pad * d_pad + c_pad * d_pad)
+            + n_pad * c_pad * itemsize
+            + 4 * RES_TILE_N * c_pad
+            + 4 * (4 * c_pad + 5 * n_pad))
+
+
 def resident_fits(n_pad: int, c_pad: int, d_pad: Optional[int],
                   rule: Optional[KernelRule] = None,
                   itemsize: int = 4) -> bool:
@@ -182,22 +203,9 @@ def resident_fits(n_pad: int, c_pad: int, d_pad: Optional[int],
     column for int8). That is what raises the memory-bounded N ceiling
     ~2× per halving of the storage width — the paper's larger-instance
     regime (§6.4) at fixed per-node memory."""
-    vmem = flags.fused_vmem_mb() * 2 ** 20
-    if rule is not None and rule.is_bitmap:
-        need = 4 * (3 * n_pad * c_pad + 4 * c_pad + 4 * n_pad)
-        return need <= vmem
-    if d_pad is None:
-        return False
-    if itemsize >= 4:
-        need = 4 * (n_pad * d_pad + c_pad * d_pad
-                    + 2 * n_pad * c_pad
-                    + 4 * c_pad + 4 * n_pad)
-    else:
-        need = (4 * (n_pad * d_pad + c_pad * d_pad)
-                + n_pad * c_pad * itemsize
-                + 4 * RES_TILE_N * c_pad
-                + 4 * (4 * c_pad + 5 * n_pad))
-    return need <= vmem
+    need = _resident_need(n_pad, c_pad, d_pad, rule=rule,
+                          itemsize=itemsize)
+    return need is not None and need <= flags.fused_vmem_mb() * 2 ** 20
 
 
 def fused_plan(n: int, c: int, d: Optional[int] = None,
@@ -323,6 +331,61 @@ def stream_plan(n: int, l: int, b: int, d: Optional[int],
     if need <= flags.stream_vmem_mb() * 2 ** 20:
         return {"tier": "kernel", "dtype": dtype}
     return None
+
+
+# ---------------------------------------------------------------------------
+# serving admission plans (serving/engine.py, DESIGN §Serving)
+# ---------------------------------------------------------------------------
+
+
+def serve_key(rule: KernelRule, n: int, c: int, d: Optional[int],
+              backend: str) -> str:
+    """Admission-compatibility key for the serving engine, in the style
+    of `autotune_key`: queries sharing a key can stack into ONE vmapped
+    resident dispatch. Rule identity includes the name AND cap (satcover
+    queries with different caps bake different kernel constants and must
+    not co-batch). The candidate axis buckets exactly like the resident
+    kernel pads (queries in one bucket stack losslessly after
+    zero-padding), while the trailing payload axis — features D for
+    vector rules, universe WORDS for bitmap rules — must match EXACTLY:
+    it is a stacking dim of the batched operand, not a padded one."""
+    tail = f"w{n}" if rule.is_bitmap else f"d{d}"
+    return (f"{rule.name}|cap{rule.cap}|c{bucket_len(c, 128)}|{tail}"
+            f"|{backend}")
+
+
+def serve_plan(rule: KernelRule, n: int, c: int, d: Optional[int],
+               backend: Optional[str] = None) -> Optional[dict]:
+    """Admission plan for ONE batched serving group, or None when the
+    query cannot ride the batched path (its solo plan is not
+    mega_resident — e.g. the working set overflows the resident tier) —
+    the engine then runs it solo through greedy() (DESIGN §Serving).
+
+    Otherwise ``{'plan': EnginePlan, 'b_max': int, 'bytes_per_query':
+    int}``: b_max caps the admitted batch so B stacked per-query
+    resident working sets fit the REPRO_SERVE_VMEM_MB budget (under
+    vmap the query axis becomes a grid dimension — programs share VMEM
+    sequentially on hardware, but B operand sets are alive in HBM and
+    pipelined prefetch overlaps them, so budgeting B× keeps the stacked
+    footprint honest) and the REPRO_SERVE_BATCH admission cap."""
+    b = resolve_backend(backend)
+    plan = select_engine(rule, n, c, d, requested="mega", backend=b)
+    if plan.engine != "mega_resident":
+        return None
+    itemsize = cache_itemsize(plan.dtype)
+    if b == "ref":
+        n_res, c_pad, d_pad = n, c, d
+    else:
+        c_pad = bucket_len(c, 128)
+        n_res = bucket_len(n, 128 if rule.is_bitmap else RES_TILE_N)
+        d_pad = -(-d // 128) * 128 if d else None
+    need = _resident_need(n_res, c_pad, d_pad, rule=rule,
+                          itemsize=itemsize)
+    if need is None:
+        return None
+    b_vmem = int(flags.serve_vmem_mb() * 2 ** 20 // max(need, 1))
+    b_max = max(1, min(flags.serve_batch(), b_vmem))
+    return {"plan": plan, "b_max": b_max, "bytes_per_query": need}
 
 
 # ---------------------------------------------------------------------------

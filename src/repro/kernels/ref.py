@@ -70,26 +70,35 @@ def fused_step(mat: jax.Array, row: jax.Array, mask: jax.Array,
 
 
 def greedy_loop(mat: jax.Array, row: jax.Array, mask: jax.Array, k: int,
-                rule: KernelRule):
+                rule: KernelRule, kq=None):
     """Oracle for the whole-greedy megakernel (kernels/greedy_loop.py): all
     k selection steps over a cached (N, C) matrix, including the per-step
     accept rule (gain > 0), mask update, and the final winner-column flush.
+
+    ``kq`` (traced scalar, default k) is the per-invocation step budget:
+    steps ≥ kq are masked — state and mask freeze, bests/gains emit
+    −1/0 — so a k-padded call matches a solo k=kq run bit-for-bit on the
+    first kq steps (the serving engine's heterogeneous-k batching; same
+    semantics as the resident kernel's ctl operand).
 
     Returns (final_row (N,), bests (k,) i32 with −1 for rejected steps,
     gains (k,) f32 raw part sums)."""
     c = mat.shape[1]
     cols = jnp.arange(c, dtype=jnp.int32)
+    kq_ = jnp.asarray(k if kq is None else kq, jnp.int32)
 
-    def step(carry, _):
+    def step(carry, s):
         row, mask, prev = carry
         new_row, best, gain = fused_step(mat, row, mask, prev, rule)
-        accept = jnp.isfinite(gain) & (gain > 0)
+        accept = jnp.isfinite(gain) & (gain > 0) & (s < kq_)
         best_i = jnp.where(accept, best, jnp.int32(-1))
         mask = jnp.where(accept & (cols == best), 0.0, mask)
-        return (new_row, mask, best_i), (best_i, gain)
+        return (new_row, mask, best_i), (best_i,
+                                         jnp.where(s < kq_, gain, 0.0))
 
     (row, _, prev), (bests, gains_) = jax.lax.scan(
-        step, (row, mask.astype(F32), jnp.int32(-1)), None, length=k)
+        step, (row, mask.astype(F32), jnp.int32(-1)),
+        jnp.arange(k, dtype=jnp.int32))
     col = jax.lax.dynamic_slice_in_dim(mat, jnp.maximum(prev, 0), 1,
                                        axis=1)[:, 0]
     return R.fold_winner(row, col, prev, rule), bests, gains_

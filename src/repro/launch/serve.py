@@ -1,4 +1,7 @@
-"""Batched serving driver: prefill a batch of prompts, then decode tokens.
+"""Batched MODEL serving driver: prefill a batch of prompts, then decode
+tokens. For serving SELECTION queries — the multi-tenant batched query
+engine over submodular objectives — see `repro.launch.qserve`
+(serving.QueryEngine, DESIGN §Serving); DESIGN.md's CLI table lists both.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
         --prompt-len 64 --gen 16 --batch 4

@@ -27,6 +27,17 @@ each call rather than caching at import):
                           'off' disables the lookup (the default — tuned
                           plans are strictly opt-in so test selections
                           stay deterministic).
+  REPRO_SERVE_BATCH       admission cap B for the serving engine: at most
+                          this many rule-compatible queries stack into one
+                          vmapped megakernel dispatch (serving/engine.py)
+  REPRO_SERVE_QUEUE       bound of the serving request queue; submits
+                          beyond it raise QueueFull (backpressure instead
+                          of unbounded memory growth)
+  REPRO_SERVE_VMEM_MB     VMEM budget for one ADMITTED BATCH: B is capped
+                          so B stacked per-query resident working sets
+                          fit this budget (plans.serve_plan). Independent
+                          of REPRO_FUSED_VMEM_MB, which gates a single
+                          query's residency.
 """
 from __future__ import annotations
 
@@ -52,10 +63,16 @@ FUSED_CACHE_DTYPE_ENV = "REPRO_FUSED_CACHE_DTYPE"
 STREAM_VMEM_MB_ENV = "REPRO_STREAM_VMEM_MB"
 STREAM_BATCH_ENV = "REPRO_STREAM_BATCH"
 AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+SERVE_BATCH_ENV = "REPRO_SERVE_BATCH"
+SERVE_QUEUE_ENV = "REPRO_SERVE_QUEUE"
+SERVE_VMEM_MB_ENV = "REPRO_SERVE_VMEM_MB"
 
 _FUSED_CACHE_MB_DEFAULT = 2048.0
 _FUSED_VMEM_MB_DEFAULT = 8.0
 _STREAM_BATCH_DEFAULT = 128
+_SERVE_BATCH_DEFAULT = 16
+_SERVE_QUEUE_DEFAULT = 1024
+_SERVE_VMEM_MB_DEFAULT = 64.0
 
 
 def _env_float(name: str, default: float) -> float:
@@ -108,6 +125,24 @@ def stream_vmem_mb() -> float:
 def stream_batch() -> int:
     """Default arrival batch size B for the streaming drivers."""
     return max(1, _env_int(STREAM_BATCH_ENV, _STREAM_BATCH_DEFAULT))
+
+
+def serve_batch() -> int:
+    """Admission cap for the serving engine: max rule-compatible queries
+    stacked into one vmapped megakernel dispatch (DESIGN §Serving)."""
+    return max(1, _env_int(SERVE_BATCH_ENV, _SERVE_BATCH_DEFAULT))
+
+
+def serve_queue() -> int:
+    """Bound of the serving engine's request queue; submits beyond it
+    raise serving.QueueFull."""
+    return max(1, _env_int(SERVE_QUEUE_ENV, _SERVE_QUEUE_DEFAULT))
+
+
+def serve_vmem_mb() -> float:
+    """VMEM budget (MB) for one ADMITTED serving batch: B stacked
+    per-query resident working sets must fit it (plans.serve_plan)."""
+    return _env_float(SERVE_VMEM_MB_ENV, _SERVE_VMEM_MB_DEFAULT)
 
 
 def autotune_cache_path() -> Optional[str]:

@@ -1,0 +1,15 @@
+"""Selection-as-a-service: multi-tenant batched query engine.
+
+`QueryEngine` admission-batches compatible one-shot queries into single
+megakernel dispatches; `TenantSession`/`SessionManager` run per-tenant
+continuous streams on the same machinery as stream_select_continuous;
+`ServeMetrics` records per-tenant latency/QPS and per-batch dispatch
+counts. See DESIGN.md §Serving and launch/qserve.py for the CLI."""
+from repro.serving.engine import (Query, QueryEngine, QueryResult,
+                                  QueueFull)
+from repro.serving.metrics import ServeMetrics, percentile
+from repro.serving.session import SessionManager, TenantSession
+
+__all__ = ["Query", "QueryEngine", "QueryResult", "QueueFull",
+           "ServeMetrics", "percentile", "SessionManager",
+           "TenantSession"]

@@ -1,0 +1,75 @@
+"""Per-tenant continuous selection sessions (DESIGN §Serving).
+
+The QueryEngine serves one-shot pool queries; a `TenantSession` serves a
+tenant whose candidates ARRIVE over time. Each session owns a
+`streaming.driver.ContinuousSelector` — the exact push/merge machinery
+behind `stream_select_continuous`, so a session that pushes batches
+B1..Bn and then calls query() returns bit-identical results to a one-shot
+`stream_select_continuous(objective, [B1..Bn], k, ...)` run with the
+same knobs. The `SessionManager` multiplexes sessions for many tenants
+over one shared ServeMetrics instance so the qserve CLI can report
+stream pushes next to batched-query latencies.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.greedy import Solution
+from repro.serving.metrics import ServeMetrics
+from repro.streaming.driver import ContinuousSelector
+
+
+class TenantSession:
+    """One tenant's always-on selection stream.
+
+    Thin metrics-recording shell over ContinuousSelector: push() folds an
+    arrival batch into the tenant's lanes, query() returns the current
+    merged Solution (monotone between calls), info() exposes the
+    selector's merge/batch counters."""
+
+    def __init__(self, tenant: str, objective, k: int, *,
+                 metrics: Optional[ServeMetrics] = None, **selector_kw):
+        self.tenant = tenant
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.selector = ContinuousSelector(objective, k, **selector_kw)
+
+    def push(self, ids, payloads, valid) -> "TenantSession":
+        self.selector.push(ids, payloads, valid)
+        self.metrics.stream_push(self.tenant)
+        return self
+
+    def query(self) -> Solution:
+        """The stream's current answer (merges any unmerged tail)."""
+        return self.selector.result()
+
+    def info(self) -> dict:
+        d = self.selector.info()
+        d["tenant"] = self.tenant
+        return d
+
+
+class SessionManager:
+    """Open/lookup/close TenantSessions sharing one ServeMetrics."""
+
+    def __init__(self, metrics: Optional[ServeMetrics] = None):
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self._sessions: Dict[str, TenantSession] = {}
+
+    def open(self, tenant: str, objective, k: int,
+             **selector_kw) -> TenantSession:
+        if tenant in self._sessions:
+            raise ValueError(f"session already open for {tenant!r}")
+        s = TenantSession(tenant, objective, k, metrics=self.metrics,
+                          **selector_kw)
+        self._sessions[tenant] = s
+        return s
+
+    def get(self, tenant: str) -> TenantSession:
+        return self._sessions[tenant]
+
+    def close(self, tenant: str) -> Solution:
+        """Close a session, returning its final answer."""
+        return self._sessions.pop(tenant).query()
+
+    def tenants(self):
+        return sorted(self._sessions)

@@ -2,9 +2,10 @@
 and the continuous distributed mode (DESIGN §Streaming)."""
 from repro.streaming.sieve import SieveState, SieveStreamer, num_levels
 from repro.streaming.window import SlidingSieve, WindowState
-from repro.streaming.driver import (stream_select, stream_select_continuous,
+from repro.streaming.driver import (ContinuousSelector, stream_select,
+                                    stream_select_continuous,
                                     stream_select_distributed)
 
-__all__ = ["SieveState", "SieveStreamer", "num_levels", "SlidingSieve",
-           "WindowState", "stream_select", "stream_select_continuous",
-           "stream_select_distributed"]
+__all__ = ["ContinuousSelector", "SieveState", "SieveStreamer",
+           "num_levels", "SlidingSieve", "WindowState", "stream_select",
+           "stream_select_continuous", "stream_select_distributed"]

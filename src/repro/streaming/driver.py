@@ -97,6 +97,132 @@ def stream_select(objective, stream: Iterable, k: int, *, eps: float = 0.1,
 # ---------------------------------------------------------------------------
 
 
+class ContinuousSelector:
+    """Push-driven core of the continuous distributed mode: `lanes`
+    vmapped local sieves + periodic GreedyML tree merges, packaged as an
+    incremental object so callers that do not own the arrival loop — the
+    per-tenant sessions of serving/session.py — can ride the exact same
+    machinery. `stream_select_continuous` is now a thin loop over it, so
+    the batch/merge semantics cannot drift between the one-shot driver
+    and the always-on sessions.
+
+    push(ids, payloads, valid) folds one arrival batch into all lanes
+    (one vmapped stream-filter dispatch) and runs a tree merge every
+    `merge_every` batches; result() returns the current merged Solution,
+    merging any unmerged tail first — monotone between calls, since the
+    root is select_better'd against the previous merged answer.
+    """
+
+    def __init__(self, objective, k: int, *, lanes: int = 4,
+                 branching: int = 0, merge_every: int = 4,
+                 eps: float = 0.1,
+                 ground: Optional[jax.Array] = None,
+                 ground_valid: Optional[jax.Array] = None,
+                 backend: Optional[str] = None,
+                 node_engine: str = "auto", sample_level: int = 0,
+                 seed: Optional[int] = None, supervisor=None):
+        self.objective, self.k = objective, k
+        self.lanes, self.merge_every = lanes, merge_every
+        self.node_engine, self.sample_level = node_engine, sample_level
+        self.seed, self.supervisor = seed, supervisor
+        self.streamer = SieveStreamer(objective, k, eps, ground=ground,
+                                      ground_valid=ground_valid,
+                                      backend=backend)
+        self._step = jax.jit(jax.vmap(self.streamer.process_batch))
+        self._extract = jax.jit(jax.vmap(self.streamer.solution))
+        b = branching or lanes
+        levels = max(1, round(math.log(lanes, b))) if lanes > 1 else 0
+        assert b ** levels == lanes, \
+            f"lanes ({lanes}) must be branching^levels (b={b})"
+        self.branching, self.levels = b, levels
+        self._axes = tuple(f"mrg{i}" for i in range(levels))
+        self._radices = [b] * levels
+        self._aug = None
+        if ground is not None and levels:
+            self._aug = jnp.broadcast_to(
+                self.streamer.ground[None],
+                (levels,) + self.streamer.ground.shape)
+        self.states, self.merged, self._base = None, None, None
+        self.merges, self.batches = [], 0
+        self._dirty = False
+
+    def _merge_round(self, states, merged):
+        lane_sols = self._extract(states)
+
+        def fn(sol):
+            return accumulate_levels(self.objective, sol, self.k,
+                                     self._axes, self._radices,
+                                     aug_levels=self._aug,
+                                     sample_level=self.sample_level,
+                                     node_engine=self.node_engine,
+                                     carry_prev=merged, seed=self.seed)
+
+        f = fn
+        for ax in self._axes:   # innermost level = innermost vmap
+            f = jax.vmap(f, axis_name=ax)
+        # lane index: level-0 digit is the LOW digit, so the row-major
+        # reshape (fastest-varying last axis) matches the tree arithmetic
+        grouped = jax.tree.map(
+            lambda x: x.reshape((self.branching,) * self.levels
+                                + x.shape[1:]), lane_sols)
+        out = f(grouped)
+        # after the last gather+greedy all lanes hold identical solutions
+        return jax.tree.map(lambda x: x[(0,) * self.levels], out)
+
+    def push(self, ids, payloads, valid) -> "ContinuousSelector":
+        """Fold one arrival batch (split equally over the lanes) into the
+        per-lane sieves; merges fire every `merge_every` pushes."""
+        ids, pay, valid = (jnp.asarray(ids), jnp.asarray(payloads),
+                           jnp.asarray(valid))
+        nb = ids.shape[0]
+        assert nb % self.lanes == 0, \
+            f"batch {nb} must split over {self.lanes} lanes"
+        shp = (self.lanes, nb // self.lanes)
+        if self.states is None:
+            self._base = self.streamer.init(pay)
+            self.states = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None],
+                                           (self.lanes,) + x.shape),
+                self._base)
+        self.states = self._step(self.states, ids.reshape(shp),
+                                 pay.reshape(shp + pay.shape[1:]),
+                                 valid.reshape(shp))
+        self.batches += 1
+        self._dirty = True
+        if self.batches % self.merge_every == 0:
+            self.merge()
+        return self
+
+    def merge(self) -> Solution:
+        """One accumulation-tree merge round over the current lane
+        states (supervised when a supervisor is attached)."""
+        if self.supervisor is not None:
+            self.merged, self.states = self.supervisor.run_merge(
+                self._merge_round, self.states, self.merged,
+                len(self.merges), self._base, self.lanes)
+        else:
+            self.merged = self._merge_round(self.states, self.merged)
+        self.merges.append(float(self.merged.value))
+        self._dirty = False
+        return self.merged
+
+    def result(self) -> Solution:
+        """The stream's current answer: the last merged Solution, after
+        merging any pushes since the last merge round."""
+        if self.states is None:
+            raise ValueError("empty stream")
+        if self.merged is None or self._dirty:
+            self.merge()
+        return self.merged
+
+    def info(self) -> dict:
+        d = {"merges": self.merges, "batches": self.batches,
+             "tree": (self.lanes, self.branching, self.levels)}
+        if self.supervisor is not None:
+            d["events"] = list(self.supervisor.events)
+        return d
+
+
 def stream_select_continuous(objective, stream: Iterable, k: int, *,
                              lanes: int = 4, branching: int = 0,
                              merge_every: int = 4, eps: float = 0.1,
@@ -135,81 +261,22 @@ def stream_select_continuous(objective, stream: Iterable, k: int, *,
     states + the merged solution are checkpointed after every merge.
     The structured recovery log lands in ``supervisor.events`` and is
     echoed in the returned info dict.
+
+    Implemented as a loop over `ContinuousSelector` — the push-driven
+    form the serving sessions (serving/session.py) use — so the one-shot
+    and always-on paths share every batch/merge decision.
     """
-    streamer = SieveStreamer(objective, k, eps, ground=ground,
-                             ground_valid=ground_valid, backend=backend)
-    step = jax.jit(jax.vmap(streamer.process_batch))
-    extract = jax.jit(jax.vmap(streamer.solution))
-    b = branching or lanes
-    levels = max(1, round(math.log(lanes, b))) if lanes > 1 else 0
-    assert b ** levels == lanes, \
-        f"lanes ({lanes}) must be branching^levels (b={b})"
-    axes = tuple(f"mrg{i}" for i in range(levels))
-    radices = [b] * levels
-    aug_levels = None
-    if ground is not None and levels:
-        aug_levels = jnp.broadcast_to(
-            streamer.ground[None], (levels,) + streamer.ground.shape)
-    states, merged = None, None
-    merges, done = [], 0
-
-    def merge_round(states, merged):
-        lane_sols = extract(states)
-
-        def fn(sol):
-            return accumulate_levels(objective, sol, k, axes, radices,
-                                     aug_levels=aug_levels,
-                                     sample_level=sample_level,
-                                     node_engine=node_engine,
-                                     carry_prev=merged, seed=seed)
-
-        f = fn
-        for ax in axes:        # innermost level = innermost vmap
-            f = jax.vmap(f, axis_name=ax)
-        # lane index: level-0 digit is the LOW digit, so the row-major
-        # reshape (fastest-varying last axis) matches the tree arithmetic
-        grouped = jax.tree.map(
-            lambda x: x.reshape((b,) * levels + x.shape[1:]), lane_sols)
-        out = f(grouped)
-        # after the last gather+greedy all lanes hold identical solutions
-        return jax.tree.map(lambda x: x[(0,) * levels], out)
-
-    for i, (ids, pay, valid) in enumerate(stream):
-        ids, pay, valid = (jnp.asarray(ids), jnp.asarray(pay),
-                           jnp.asarray(valid))
-        nb = ids.shape[0]
-        assert nb % lanes == 0, f"batch {nb} must split over {lanes} lanes"
-        shp = (lanes, nb // lanes)
-        ids_l = ids.reshape(shp)
-        pay_l = pay.reshape(shp + pay.shape[1:])
-        val_l = valid.reshape(shp)
-        if states is None:
-            base = streamer.init(pay)
-            states = jax.tree.map(
-                lambda x: jnp.broadcast_to(x[None], (lanes,) + x.shape),
-                base)
-        states = step(states, ids_l, pay_l, val_l)
-        done = i + 1
-        if done % merge_every == 0:
-            if supervisor is not None:
-                merged, states = supervisor.run_merge(
-                    merge_round, states, merged, len(merges), base, lanes)
-            else:
-                merged = merge_round(states, merged)
-            merges.append(float(merged.value))
-    if states is None:
-        raise ValueError("empty stream")
-    if merged is None or done % merge_every != 0:
-        if supervisor is not None:
-            merged, states = supervisor.run_merge(
-                merge_round, states, merged, len(merges), base, lanes)
-        else:
-            merged = merge_round(states, merged)
-        merges.append(float(merged.value))
-    info = {"merges": merges, "batches": done, "tree": (lanes, b, levels)}
-    if supervisor is not None:
-        info["events"] = list(supervisor.events)
-    return merged, info
+    sel = ContinuousSelector(objective, k, lanes=lanes,
+                             branching=branching, merge_every=merge_every,
+                             eps=eps, ground=ground,
+                             ground_valid=ground_valid, backend=backend,
+                             node_engine=node_engine,
+                             sample_level=sample_level, seed=seed,
+                             supervisor=supervisor)
+    for ids, pay, valid in stream:
+        sel.push(ids, pay, valid)
+    merged = sel.result()
+    return merged, sel.info()
 
 
 # ---------------------------------------------------------------------------

@@ -319,6 +319,67 @@ def test_sieve_quality_bound(name):
 
 
 # ---------------------------------------------------------------------------
+# serving tier — admitted-batch parity (DESIGN §Serving)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", OBJECTIVES)
+def test_serving_batched_parity(name, backend):
+    """A mixed admitted batch — the named objective at ≥3 heterogeneous k
+    (forcing co-batching with masked steps), every OTHER registered
+    objective riding along in its own sub-batch, plus one constrained
+    query on the solo-fallback path — must return selections BIT-
+    IDENTICAL (ids, valid, evals) to solo greedy() runs on the same
+    pools. Registry-parameterized: a newly registered spec gets batched
+    serving coverage automatically (ci_smoke.sh sweeps this file per
+    objective)."""
+    from repro.serving import Query, QueryEngine
+    eng = QueryEngine(backend=backend)
+
+    def _q(nm, k, n, seed):
+        ids, pay, valid = _pool(nm, n=n, seed=seed)
+        uni = UNIVERSE if _is_bitmap(nm) else 0
+        return (eng.submit(Query(nm, k, ids, pay, valid, tenant=nm,
+                                 universe=uni)),
+                nm, k, (ids, pay, valid))
+    subs = [_q(name, 5, 96, 2), _q(name, 9, 120, 3), _q(name, 12, 96, 4)]
+    for other in OBJECTIVES:
+        if other != name:
+            subs.append(_q(other, 7, 96, 5))
+    ids, pay, valid = _pool(name, n=96, seed=6)
+    con = PartitionMatroid(jnp.asarray(np.arange(96) % 3, jnp.int32),
+                           jnp.asarray([3, 2, 4], jnp.int32))
+    qc = eng.submit(Query(name, 6, ids, pay, valid, constraint=con,
+                          universe=UNIVERSE if _is_bitmap(name) else 0))
+    results = eng.drain()
+    assert len(results) == len(subs) + 1
+    for qid, nm, k, (qi, qp, qv) in subs:
+        solo = greedy(_make(nm, backend), qi, qp, qv, k)
+        r = results[qid]
+        assert r.batched, (nm, k)
+        np.testing.assert_array_equal(np.asarray(r.solution.ids),
+                                      np.asarray(solo.ids))
+        np.testing.assert_array_equal(np.asarray(r.solution.valid),
+                                      np.asarray(solo.valid))
+        assert int(r.solution.evals) == int(solo.evals)
+        np.testing.assert_allclose(float(r.solution.value),
+                                   float(solo.value), rtol=1e-5,
+                                   atol=1e-5)
+    solo_c = greedy(_make(name, backend), ids, pay, valid, 6,
+                    constraint=con)
+    rc = results[qc]
+    assert not rc.batched
+    np.testing.assert_array_equal(np.asarray(rc.solution.ids),
+                                  np.asarray(solo_c.ids))
+    # the named objective's 3 queries co-batched: same serve key
+    keys = {results[qid].key for qid, nm, _, _ in subs if nm == name}
+    assert len(keys) == 1 and None not in keys
+    assert {results[qid].batch_size for qid, nm, _, _ in subs
+            if nm == name} == {3}
+
+
+# ---------------------------------------------------------------------------
 # registry & planning surface
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,333 @@
+"""Serving subsystem tests (DESIGN §Serving): admission batching,
+bounded-queue backpressure, VMEM-budgeted batch caps, the one-dispatch-
+per-admitted-batch jaxpr regression (the vmap contract of
+ops.count_pallas_dispatches), tenant sessions riding the continuous
+streaming driver, serving flags, and metrics. Cross-objective batched↔solo
+bit-parity lives in test_objective_protocol.py (registry-parameterized,
+swept per objective by scripts/ci_smoke.sh)."""
+import inspect
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.greedy import greedy
+from repro.core.objective import make_objective
+from repro.data.synthetic import gen_images, gen_stream
+from repro.kernels import ops, plans, rules
+from repro.runtime import flags
+from repro.serving import (Query, QueryEngine, QueueFull, ServeMetrics,
+                           SessionManager, TenantSession, percentile)
+from repro.streaming import stream_select_continuous
+
+
+def _pool(n=96, d=32, seed=0):
+    pay = jnp.asarray(gen_images(n, d, classes=8, seed=seed))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    valid = (jnp.arange(n) % 11) != 0
+    return ids, pay, valid
+
+
+def _query(name="facility", k=8, n=96, d=32, seed=0, **kw):
+    ids, pay, valid = _pool(n, d, seed)
+    return Query(name, k, ids, pay, valid, **kw)
+
+
+# ---------------------------------------------------------------------------
+# queue + admission
+# ---------------------------------------------------------------------------
+
+
+def test_queue_bound_backpressure():
+    eng = QueryEngine(backend="ref", queue_cap=2)
+    eng.submit(_query(seed=0))
+    eng.submit(_query(seed=1))
+    assert eng.pending == 2
+    with pytest.raises(QueueFull):
+        eng.submit(_query(seed=2))
+    res = eng.drain()                      # drain frees capacity
+    assert len(res) == 2 and eng.pending == 0
+    eng.submit(_query(seed=2))
+
+
+def test_admission_groups_compatible_fifo():
+    """Interleaved facility/kmedoid queries regroup by serve key up to
+    the admission cap, FIFO within a key."""
+    eng = QueryEngine(backend="ref", max_batch=2)
+    order = ["facility", "kmedoid", "facility", "kmedoid", "facility"]
+    qids = [eng.submit(_query(name, k=6 + i, seed=i))
+            for i, name in enumerate(order)]
+    res = eng.drain()
+    assert len(res) == 5 and all(res[q].batched for q in qids)
+    sizes = sorted(b["size"] for b in eng.metrics.batches)
+    assert sizes == [1, 2, 2]
+    keys = {res[q].key for q in qids}
+    assert len(keys) == 2                  # one key per rule
+    # co-batched queries share their key; the odd facility ran alone
+    assert res[qids[0]].key == res[qids[2]].key == res[qids[4]].key
+
+
+def test_heterogeneous_pool_sizes_share_a_bucket():
+    """c=96 and c=120 both bucket to 128 → one admitted batch; a larger
+    pool lands in a different bucket → different key."""
+    eng = QueryEngine(backend="ref")
+    a = eng.submit(_query(n=96, k=5, seed=1))
+    b = eng.submit(_query(n=120, k=9, seed=2))
+    c = eng.submit(_query(n=200, k=5, seed=3))
+    res = eng.drain()
+    assert res[a].key == res[b].key != res[c].key
+    assert res[a].batch_size == 2 and res[c].batch_size == 1
+
+
+def test_vmem_budget_caps_admitted_batch(monkeypatch):
+    """REPRO_SERVE_VMEM_MB bounds B: with room for only one per-query
+    working set every batch degenerates to size 1; at the default budget
+    the same workload co-batches."""
+    monkeypatch.setenv("REPRO_SERVE_VMEM_MB", "0.05")
+    eng = QueryEngine(backend="ref")
+    for seed in range(4):
+        eng.submit(_query(seed=seed))
+    res = eng.drain()
+    assert all(r.batched and r.batch_size == 1 for r in res.values())
+    monkeypatch.delenv("REPRO_SERVE_VMEM_MB")
+    eng2 = QueryEngine(backend="ref")
+    for seed in range(4):
+        eng2.submit(_query(seed=seed))
+    res2 = eng2.drain()
+    assert {r.batch_size for r in res2.values()} == {4}
+
+
+# ---------------------------------------------------------------------------
+# solo fallbacks
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_query_falls_back_solo_and_matches():
+    eng = QueryEngine(backend="ref")
+    ids, pay, valid = _pool(seed=4)
+    qid = eng.submit(Query("facility", 8, ids, pay, valid, sample=32,
+                           seed=7))
+    r = eng.drain()[qid]
+    assert not r.batched
+    obj = make_objective("facility", backend="ref")
+    solo = greedy(obj, ids, pay, valid, 8, sample=32,
+                  key=jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(r.solution.ids),
+                                  np.asarray(solo.ids))
+
+
+def test_engine_override_falls_back_solo():
+    eng = QueryEngine(backend="ref")
+    ids, pay, valid = _pool(seed=5)
+    qid = eng.submit(Query("facility", 8, ids, pay, valid, engine="step"))
+    r = eng.drain()[qid]
+    assert not r.batched
+    solo = greedy(make_objective("facility", backend="ref"),
+                  ids, pay, valid, 8, engine="step")
+    np.testing.assert_array_equal(np.asarray(r.solution.ids),
+                                  np.asarray(solo.ids))
+
+
+def test_resident_overflow_falls_back_solo(monkeypatch):
+    """When the solo plan is not mega_resident (shrunken VMEM budget →
+    serve_plan None) the engine must still serve the query, solo."""
+    monkeypatch.setenv("REPRO_FUSED_VMEM_MB", "0.001")
+    eng = QueryEngine(backend="ref")
+    qid = eng.submit(_query(seed=6))
+    r = eng.drain()[qid]
+    assert not r.batched and bool(r.solution.valid.any())
+
+
+# ---------------------------------------------------------------------------
+# dispatch counting — the measured 1-dispatch claim
+# ---------------------------------------------------------------------------
+
+
+def test_admitted_batch_is_one_dispatch():
+    """The engine's own executor jaxpr: ONE pallas dispatch per admitted
+    batch on the interpret backend, recorded in metrics."""
+    eng = QueryEngine(backend="interpret", max_batch=4)
+    for seed in range(4):
+        eng.submit(_query(k=5 + seed, seed=seed))
+    res = eng.drain()
+    assert all(r.batched and r.batch_size == 4 for r in res.values())
+    assert [b["dispatches"] for b in eng.metrics.batches] == [1]
+
+
+def test_count_pallas_dispatches_sees_through_vmap():
+    """The vmap contract (ops.count_pallas_dispatches docstring): a
+    vmapped resident megakernel stays ONE pallas_call eqn = 1 dispatch,
+    while a lax.map over the same per-query kernel pays the trip count.
+    This is the measurement backing the engine's batching win."""
+    obj = make_objective("facility", backend="interpret")
+    B, n, d, k = 4, 96, 32, 6
+    sds = jax.ShapeDtypeStruct
+    pays = sds((B, n, d), jnp.float32)
+    vals = sds((B, n), jnp.bool_)
+    ks = sds((B,), jnp.int32)
+    lims = sds((B, 2), jnp.int32)
+
+    def batched(p, v, kq, lm):
+        return obj.megakernel_loop_batched(p, v, kq, k, logical=lm)
+
+    jx = jax.make_jaxpr(batched)(pays, vals, ks, lims)
+    assert ops.count_pallas_dispatches(jx.jaxpr) == 1
+
+    def looped(p, v, kq, lm):
+        return jax.lax.map(
+            lambda t: obj.megakernel_loop_batched(
+                t[0][None], t[1][None], t[2][None], k,
+                logical=t[3][None]),
+            (p, v, kq, lm))
+
+    jx2 = jax.make_jaxpr(looped)(pays, vals, ks, lims)
+    assert ops.count_pallas_dispatches(jx2.jaxpr) == B
+
+
+# ---------------------------------------------------------------------------
+# serving plan surface (kernels/plans.py)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_key_discriminates():
+    k1 = plans.serve_key(rules.DOT_MAX, 96, 96, 32, "interpret")
+    assert k1 == plans.serve_key(rules.DOT_MAX, 120, 120, 32, "interpret")
+    assert k1 != plans.serve_key(rules.DOT_MAX, 96, 96, 48, "interpret")
+    assert k1 != plans.serve_key(rules.DOT_MAX, 200, 200, 32, "interpret")
+    assert k1 != plans.serve_key(rules.DIST_MIN, 96, 96, 32, "interpret")
+    assert k1 != plans.serve_key(rules.DOT_MAX, 96, 96, 32, "ref")
+    # rule identity includes the cap (satcover parameterization)
+    assert (plans.serve_key(rules.sat_sum(1.5), 96, 96, 32, "ref")
+            != plans.serve_key(rules.sat_sum(2.0), 96, 96, 32, "ref"))
+    # bitmap compatibility is exact in the words axis
+    assert (plans.serve_key(rules.BITS_OR, 12, 96, None, "ref")
+            != plans.serve_key(rules.BITS_OR, 13, 96, None, "ref"))
+
+
+def test_serve_plan_budget_math(monkeypatch):
+    sp = plans.serve_plan(rules.DOT_MAX, 96, 96, 32, backend="ref")
+    assert sp is not None and sp["plan"].engine == "mega_resident"
+    assert sp["bytes_per_query"] > 0
+    assert 1 <= sp["b_max"] <= flags.serve_batch()
+    # b_max tracks the VMEM budget, floored at 1
+    monkeypatch.setenv("REPRO_SERVE_VMEM_MB", "0.0001")
+    assert plans.serve_plan(rules.DOT_MAX, 96, 96, 32,
+                            backend="ref")["b_max"] == 1
+    monkeypatch.setenv("REPRO_SERVE_VMEM_MB", "4096")
+    big = plans.serve_plan(rules.DOT_MAX, 96, 96, 32, backend="ref")
+    assert big["b_max"] == flags.serve_batch()   # admission cap still rules
+    # non-resident shapes cannot co-batch at all
+    monkeypatch.setenv("REPRO_FUSED_VMEM_MB", "0.001")
+    assert plans.serve_plan(rules.DOT_MAX, 96, 96, 32,
+                            backend="ref") is None
+
+
+# ---------------------------------------------------------------------------
+# serving flags (runtime/flags.py) — satellite: typed accessors only
+# ---------------------------------------------------------------------------
+
+
+def test_serve_flags_accessors(monkeypatch):
+    for var in ("REPRO_SERVE_BATCH", "REPRO_SERVE_QUEUE",
+                "REPRO_SERVE_VMEM_MB"):
+        monkeypatch.delenv(var, raising=False)
+    assert flags.serve_batch() == 16
+    assert flags.serve_queue() == 1024
+    assert flags.serve_vmem_mb() == 64.0
+    monkeypatch.setenv("REPRO_SERVE_BATCH", "3")
+    monkeypatch.setenv("REPRO_SERVE_QUEUE", "7")
+    monkeypatch.setenv("REPRO_SERVE_VMEM_MB", "1.5")
+    assert (flags.serve_batch(), flags.serve_queue(),
+            flags.serve_vmem_mb()) == (3, 7, 1.5)
+
+
+def test_no_raw_environ_in_serving():
+    import repro.serving.engine as E
+    import repro.serving.metrics as M
+    import repro.serving.session as S
+    for mod in (E, M, S):
+        assert "os.environ" not in inspect.getsource(mod), mod.__name__
+
+
+# ---------------------------------------------------------------------------
+# tenant sessions (streaming)
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_session_matches_continuous_driver():
+    st = gen_stream("facility", 128, d=24, universe=384, batch=32, seed=1)
+    obj = make_objective("facility", backend="ref")
+    ground = jnp.asarray(st.payloads)
+    kw = dict(lanes=2, merge_every=2, ground=ground, backend="ref")
+    sess = TenantSession("t0", obj, 6, **kw)
+    for ids, pay, valid in st:
+        sess.push(ids, pay, valid)
+    ref_sol, ref_info = stream_select_continuous(obj, st, 6, **kw)
+    got = sess.query()
+    np.testing.assert_array_equal(np.asarray(got.ids),
+                                  np.asarray(ref_sol.ids))
+    np.testing.assert_array_equal(np.asarray(got.valid),
+                                  np.asarray(ref_sol.valid))
+    info = sess.info()
+    assert info["merges"] == ref_info["merges"]
+    assert info["tenant"] == "t0"
+    assert sess.metrics.tenant_stats("t0")["stream_pushes"] == 4
+
+
+def test_session_manager_lifecycle():
+    st = gen_stream("facility", 64, d=16, universe=384, batch=32, seed=2)
+    obj = make_objective("facility", backend="ref")
+    ground = jnp.asarray(st.payloads)
+    mgr = SessionManager()
+    s = mgr.open("alice", obj, 4, lanes=2, ground=ground, backend="ref")
+    with pytest.raises(ValueError):
+        mgr.open("alice", obj, 4)
+    for ids, pay, valid in st:
+        mgr.get("alice").push(ids, pay, valid)
+    assert mgr.tenants() == ["alice"]
+    sol = mgr.close("alice")
+    assert bool(sol.valid.any()) and mgr.tenants() == []
+    assert mgr.metrics.tenant_stats("alice")["stream_pushes"] == 2
+    assert s.metrics is mgr.metrics
+
+
+def test_empty_session_raises():
+    obj = make_objective("coverage", universe=64, backend="ref")
+    with pytest.raises(ValueError):
+        TenantSession("t", obj, 4, backend="ref").query()
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_interpolation():
+    assert np.isnan(percentile([], 50))
+    assert percentile([3.0], 99) == 3.0
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    assert percentile(xs, 99) == pytest.approx(3.97)
+
+
+def test_metrics_snapshot_with_fake_clock():
+    t = [0.0]
+    m = ServeMetrics(clock=lambda: t[0])
+    t0 = m.submitted("a")
+    t[0] = 0.25
+    assert m.completed("a", t0, batched=True) == pytest.approx(0.25)
+    t0b = m.submitted("b")
+    t[0] = 0.5
+    m.completed("b", t0b, batched=False)
+    m.batch_executed("key", 2, 1, 0.1)
+    snap = m.snapshot()
+    assert snap["total_queries"] == 2
+    assert snap["total_batches"] == 1
+    assert snap["solo_fallbacks"] == 1
+    assert snap["dispatches_per_batch"] == [1]
+    assert snap["queries_per_s"] == pytest.approx(4.0)
+    assert snap["tenants"]["a"]["p50_ms"] == pytest.approx(250.0)
