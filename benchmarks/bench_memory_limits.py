@@ -1,23 +1,61 @@
-"""Table 3 reproduction: fixed k, varying per-machine memory limits.
+from repro.launch.mesh import force_host_devices
 
-The paper's three machine organizations — (m=8, b=8, L=1 = RandGreedi),
-(m=16, b=4, L=2), (m=32, b=2, L=5) — on social-like (Friendster regime),
-road-like (road_usa) and webdocs-like data. Reports function value relative
-to Greedy and execution time; quality must be insensitive to tree depth.
+force_host_devices(8, trigger="--distributed")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Memory-limit benchmarks.
+
+Default mode is the Table 3 reproduction: fixed k, varying per-machine
+memory limits.  The paper's three machine organizations — (m=8, b=8,
+L=1 = RandGreedi), (m=16, b=4, L=2), (m=32, b=2, L=5) — on social-like
+(Friendster regime), road-like (road_usa) and webdocs-like data.
+Reports function value relative to Greedy and execution time; quality
+must be insensitive to tree depth.
+
+`--distributed` is the paper-scale memory-ceiling result instead
+(§4/§6.4): at a FIXED per-device budget, sweep N and record the largest
+instance each arm can solve —
+
+  solo      one device holding the whole pool (engine auto-selected,
+            costed by plans.engine_hbm_bytes)
+  flat      RandGreedi over `lanes` machines: radices=(lanes,); its
+            accumulation node holds the m·k pool, which busts the
+            budget INDEPENDENT of N once m·k is large enough — the
+            paper's case against single-level reduction
+  planned   plans.plan_tree — branching, levels and per-leaf sharding
+            chosen from the same dtype-aware memory model
+
+then EXECUTES witness instances that solo and flat both reject on a
+real `lanes`-device host-platform mesh (level-wall timings from the
+SelectionSupervisor dispatch log), checks the sharded tier is
+bit-identical to solo greedy(), verifies the tree run against the
+single-device lane simulation, and measures the k·ntiles gains-dispatch
+contract on the interpret backend.  Results →
+benchmarks/BENCH_distributed.json.
+
+    PYTHONPATH=src python benchmarks/bench_memory_limits.py [--full]
+    PYTHONPATH=src python benchmarks/bench_memory_limits.py \
+        --distributed [--smoke]
 """
-from __future__ import annotations
-
 import argparse
+import json
+import os
 
-from benchmarks.common import Timer, build, instances
-from repro.core.simulate import run_greedy_lazy, run_tree_lazy
-from repro.core.tree import AccumulationTree
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "BENCH_distributed.json")
 
 
+# --------------------------------------------------------------------------
+# legacy Table 3 mode (lazy simulator; imports deferred so --distributed
+# works without benchmarks/ on sys.path as a package)
+# --------------------------------------------------------------------------
 ORGS = [(8, 8), (16, 4), (32, 2)]   # (m, b) — L = 1, 2, 5 like Table 3
 
 
 def run(full: bool = False):
+    from benchmarks.common import Timer, build, instances
+    from repro.core.simulate import run_greedy_lazy, run_tree_lazy
+    from repro.core.tree import AccumulationTree
+
     rows = []
     for name in ("social-like", "road-like", "webdocs-like"):
         spec = instances(full)[name]
@@ -53,7 +91,205 @@ def main(full: bool = False):
     return rows
 
 
+# --------------------------------------------------------------------------
+# --distributed mode: memory-model feasibility sweep + executed witnesses
+# --------------------------------------------------------------------------
+def feasibility_sweep(rule, d, k, lanes, budget_mb, n_max, backend=None):
+    """Model-level max-N per arm at `budget_mb` per device (no execution).
+
+    Flat RandGreedi is costed exactly the way plan_tree costs the (m,)
+    shape: leaf engine on the ceil(n/m) pool, node engine on the m·k
+    accumulation pool — whichever stage peaks."""
+    from repro.kernels import plans
+
+    budget = budget_mb * 2 ** 20
+    rows, max_n = [], {"solo": 0, "flat": 0, "planned": 0}
+    n = 128
+    while n <= n_max:
+        sp = plans.select_engine(rule, n, n, d, backend=backend)
+        solo_b = plans.engine_hbm_bytes(sp, n, n, d)
+        leaf_n = -(-n // lanes)
+        lp = plans.select_engine(rule, leaf_n, leaf_n, d, backend=backend)
+        nc = lanes * k
+        fp = plans.select_engine(rule, nc, nc, d, backend=backend)
+        flat_b = max(plans.engine_hbm_bytes(lp, leaf_n, leaf_n, d),
+                     plans.engine_hbm_bytes(fp, nc, nc, d))
+        tp = plans.plan_tree(rule, n, d, k, lanes, budget_mb=budget_mb,
+                             backend=backend)
+        rows.append(dict(
+            n=n, solo_bytes=int(solo_b), solo_ok=solo_b <= budget,
+            flat_bytes=int(flat_b), flat_ok=flat_b <= budget,
+            planned_ok=tp is not None,
+            plan=None if tp is None else dict(
+                radices=list(tp.radices), shard=tp.shard,
+                leaf_engine=tp.leaf_plan.engine,
+                node_engine=tp.node_plan.engine,
+                tile_c=tp.leaf_plan.tile_c,
+                peak_bytes=int(tp.peak_bytes))))
+        r = rows[-1]
+        for arm, ok in (("solo", r["solo_ok"]), ("flat", r["flat_ok"]),
+                        ("planned", r["planned_ok"])):
+            if ok:
+                max_n[arm] = n
+        n *= 2
+    return rows, max_n
+
+
+def run_witness(objective, n, d, k, lanes, seed, label):
+    """Execute the planned tree for (n, d, k) on a real `lanes`-device
+    host mesh through the SelectionSupervisor; return level walls plus a
+    bit-identity verdict (vs solo greedy() for fully sharded plans, vs
+    the single-device lane simulation for multi-machine trees)."""
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.greedy import greedy
+    from repro.kernels import plans
+    from repro.launch.mesh import make_tree_mesh
+    from repro.runtime.supervisor import SelectionSupervisor
+
+    rule = objective.rule
+    tp = plans.plan_tree(rule, n, d, k, lanes, backend=objective.backend)
+    assert tp is not None, f"witness n={n} must be plannable"
+    pay = jax.random.normal(jax.random.PRNGKey(seed), (n, d), jnp.float32)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    val = jnp.ones((n,), bool)
+
+    mesh = make_tree_mesh(tp.radices, tp.shard)
+    tree_axes = tuple(f"lvl{i}" for i in range(len(tp.radices)))
+    with tempfile.TemporaryDirectory() as td:
+        sup = SelectionSupervisor(ckpt_dir=td)
+        sol, _ = sup.select(objective, ids, pay, val, k, lanes=lanes,
+                            mesh=mesh, tree_axes=tree_axes)
+    walls = [dict(stage=e["level"], wall_s=round(e["wall_s"], 4))
+             for e in sup.events if e["kind"] == "dispatch"]
+
+    if tp.shard == lanes:          # one sharded leaf == solo greedy, bitwise
+        ref = greedy(objective, ids, pay, val, k, engine="step")
+        against = "solo_greedy_step"
+    else:                          # tree: mesh must match the lane sim
+        with tempfile.TemporaryDirectory() as td:
+            ref, _ = SelectionSupervisor(ckpt_dir=td).select(
+                objective, ids, pay, val, k, lanes=lanes,
+                branching=tp.branching, shard=tp.shard)
+        against = "single_device_sim"
+    identical = (bool(np.array_equal(np.asarray(sol.ids),
+                                     np.asarray(ref.ids)))
+                 and bool(np.array_equal(np.asarray(sol.valid),
+                                         np.asarray(ref.valid))))
+    return dict(label=label, n=n, d=d, k=k, lanes=lanes,
+                radices=list(tp.radices), shard=tp.shard,
+                leaf_engine=tp.leaf_plan.engine,
+                tile_c=tp.leaf_plan.tile_c,
+                peak_bytes=int(tp.peak_bytes),
+                level_walls=walls, value=float(sol.value),
+                bit_identical_to=against, bit_identical=identical)
+
+
+def dispatch_contract(k=5, lanes=4, n=64, d=8, tile_c=8):
+    """Count gains dispatches of the sharded leaf on the interpret
+    backend: exactly k·ntiles per lane (ops.count_pallas_dispatches'
+    per-lane shard_map contract)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.objective import make_objective
+    from repro.kernels import ops
+    from repro.kernels.shard_gains import shard_greedy_sim
+
+    obj = make_objective("facility", backend="interpret")
+    pay = jax.random.normal(jax.random.PRNGKey(0), (n, d), jnp.float32)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    val = jnp.ones((n,), bool)
+    jaxpr = jax.make_jaxpr(
+        lambda i, p, v: shard_greedy_sim(obj, i, p, v, k, lanes=lanes,
+                                         tile_c=tile_c))(ids, pay, val)
+    got = ops.count_pallas_dispatches(jaxpr)
+    ntiles = (n // lanes) // tile_c
+    return dict(k=k, lanes=lanes, ntiles=ntiles,
+                expected=k * ntiles, measured=int(got),
+                ok=int(got) == k * ntiles)
+
+
+def run_distributed(smoke: bool = False, budget_mb: float = 0.0,
+                    lanes: int = 8, seed: int = 0):
+    from repro.core.objective import make_objective
+
+    if smoke:
+        budget_mb, d, k, n_max = budget_mb or 0.25, 64, 32, 2 ** 13
+    else:
+        budget_mb, d, k, n_max = budget_mb or 1.0, 125, 64, 2 ** 18
+    # the engine gates (fused_plan / shard_plan escalation) read the live
+    # knob — pin it so planning and execution see the same budget
+    os.environ["REPRO_FUSED_CACHE_MB"] = str(budget_mb)
+
+    obj = make_objective("facility")
+    rows, max_n = feasibility_sweep(obj.rule, d, k, lanes, budget_mb, n_max,
+                                    backend=obj.backend)
+    print(f"budget={budget_mb}MB/device  d={d}  k={k}  lanes={lanes}")
+    print(f"max solvable N: solo={max_n['solo']}  flat={max_n['flat']}  "
+          f"planned={max_n['planned']}")
+    assert max_n["planned"] > max_n["solo"], \
+        "planned tree must beat the single-device ceiling"
+    assert max_n["planned"] > max_n["flat"], \
+        "planned tree must beat flat RandGreedi (m*k node pool)"
+
+    # witnesses: the largest fully-sharded plan and (full mode) the
+    # largest multi-level tree — both at N solo and flat reject
+    witnesses = []
+    shard_ns = [r["n"] for r in rows
+                if r["plan"] and r["plan"]["shard"] == lanes
+                and not r["solo_ok"] and not r["flat_ok"]]
+    if shard_ns:
+        witnesses.append(run_witness(obj, max(shard_ns), d, k, lanes,
+                                     seed, "sharded_leaf"))
+    if not smoke:
+        tree_ns = [r["n"] for r in rows
+                   if r["plan"] and len(r["plan"]["radices"]) >= 2
+                   and not r["solo_ok"] and not r["flat_ok"]]
+        if tree_ns:
+            witnesses.append(run_witness(obj, max(tree_ns), d, k, lanes,
+                                         seed, "planned_tree"))
+    for w in witnesses:
+        walls = ", ".join(f"L{e['stage']}={e['wall_s']:.3f}s"
+                          for e in w["level_walls"])
+        print(f"witness {w['label']}: n={w['n']} radices={w['radices']} "
+              f"shard={w['shard']} [{walls}] "
+              f"identical({w['bit_identical_to']})={w['bit_identical']}")
+        assert w["bit_identical"], f"witness {w['label']} diverged"
+    assert witnesses, "no executable witness found in the sweep"
+
+    contract = dispatch_contract()
+    print(f"dispatch contract: expected {contract['expected']} "
+          f"(k*ntiles), measured {contract['measured']}")
+    assert contract["ok"], contract
+
+    out = dict(mode="smoke" if smoke else "full",
+               config=dict(budget_mb=budget_mb, d=d, k=k, lanes=lanes,
+                           objective="facility"),
+               max_n=dict(max_n,
+                          planned_over_solo=(max_n["planned"]
+                                             / max(max_n["solo"], 1))),
+               sweep=rows, witnesses=witnesses,
+               dispatch_contract=contract)
+    with open(OUT, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {OUT}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    main(ap.parse_args().full)
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--budget-mb", type=float, default=0.0)
+    ap.add_argument("--lanes", type=int, default=8)
+    args = ap.parse_args()
+    if args.distributed:
+        run_distributed(args.smoke, args.budget_mb, args.lanes)
+    else:
+        main(args.full)

@@ -94,4 +94,29 @@ test -s benchmarks/BENCH_serve.json || {
     exit 1
 }
 
+echo "== distributed scale (sharded tier + tree planner) =="
+# shrunken per-device budget: the solo ladder and flat RandGreedi must
+# both be refused so selection is forced through the sharded cross-device
+# tier and the memory-model tree planner; the bench executes witness
+# instances on a real 8-lane host mesh (bit-identical to solo greedy)
+# and writes the memory-ceiling artifact
+python -m pytest -q tests/test_shard_scale.py
+python benchmarks/bench_memory_limits.py --distributed --smoke
+test -s benchmarks/BENCH_distributed.json || {
+    echo "FAIL: BENCH_distributed.json was not written"
+    exit 1
+}
+python - <<'PY'
+import json
+rec = json.load(open("benchmarks/BENCH_distributed.json"))
+mx = rec["max_n"]
+assert mx["planned"] > mx["solo"] >= mx["flat"], mx
+assert all(w["bit_identical"] for w in rec["witnesses"]), rec["witnesses"]
+assert any(w["shard"] > 1 for w in rec["witnesses"]), \
+    "smoke run never exercised the sharded path"
+assert rec["dispatch_contract"]["ok"], rec["dispatch_contract"]
+print(f"distributed scale OK: planned N={mx['planned']} vs "
+      f"solo N={mx['solo']}, flat N={mx['flat']}")
+PY
+
 echo "CI smoke OK"

@@ -43,6 +43,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.greedy import Solution, greedy, replay_value, select_better
 from repro.kernels import ops as kernel_ops
+from repro.kernels.shard_gains import shard_greedy
 
 F32 = jnp.float32
 
@@ -314,13 +315,21 @@ def root_solution(lane_sols: Solution) -> Solution:
 class LevelDispatcher:
     """Dispatches one GreedyML stage at a time over stacked per-lane state.
 
-    ``radices``: per-level branching (innermost level first); lanes =
-    prod(radices). ``mesh``: a real mesh with one device per lane runs
-    every stage through shard_map; None simulates the lanes on the single
-    local device with nested vmap over the same named axes (bit-identical
-    lane-local math). All stages take/return STACKED arrays with a
-    leading (lanes, …) dim living in host-reachable memory — that is the
-    unit the supervisor checkpoints and reshards.
+    ``radices``: per-level branching (innermost level first); tree
+    machines = prod(radices). ``shard`` > 1 splits EACH leaf machine's
+    pool over that many additional cooperating lanes running the sharded
+    cross-device engine (kernels/shard_gains.py) — the tree planner's
+    knob for pools no single device can hold. Total lanes = machines ·
+    shard, ordered machine-major with the shard digit LOWEST (lane =
+    machine·shard + shard_digit), so `shard_lanes`' contiguous blocks
+    hand each shard lane a contiguous slice of its machine's pool (the
+    sharded engine's global pool order). ``mesh``: a real mesh with one
+    device per lane runs every stage through shard_map; None simulates
+    the lanes on the single local device with nested vmap over the same
+    named axes (bit-identical lane-local math). All stages take/return
+    STACKED arrays with a leading (lanes, …) dim living in
+    host-reachable memory — that is the unit the supervisor checkpoints
+    and reshards.
     """
 
     objective: Any
@@ -333,15 +342,28 @@ class LevelDispatcher:
     sample_leaf: int = 0
     sample_level: int = 0
     seed: Optional[int] = None
+    shard: int = 1
+    shard_axis: str = "shard"
+    tile_c: int = 0
 
     def __post_init__(self):
         self.radices = tuple(self.radices)
-        self.lanes = int(math.prod(self.radices)) if self.radices else 1
+        self.shard = max(1, int(self.shard))
+        self.machines = int(math.prod(self.radices)) if self.radices else 1
+        self.lanes = self.machines * self.shard
+        if self.shard > 1 and self.sample_leaf:
+            raise ValueError("sharded leaves do not support stochastic "
+                             "leaf sampling (per-step host logic has no "
+                             "cross-device protocol)")
         if self.tree_axes is None:
             if self.mesh is not None:
                 # make_machine_mesh lists axes outermost-first; tree
-                # levels are innermost-first (level 0 = low id digit)
-                self.tree_axes = tuple(reversed(self.mesh.axis_names))
+                # levels are innermost-first (level 0 = low id digit);
+                # the shard axis, when present, is the INNERMOST mesh
+                # axis and is NOT a tree level
+                axes = [a for a in self.mesh.axis_names
+                        if a != self.shard_axis]
+                self.tree_axes = tuple(reversed(axes))
             else:
                 self.tree_axes = tuple(
                     f"flt{i}" for i in range(len(self.radices)))
@@ -349,9 +371,15 @@ class LevelDispatcher:
         self.node_engine = self.node_engine or self.engine
         if self.mesh is not None:
             got = math.prod(self.mesh.shape[a] for a in self.tree_axes)
-            if got != self.lanes:
+            if got != self.machines:
                 raise ValueError(f"mesh axes {self.tree_axes} hold {got} "
-                                 f"devices, need {self.lanes}")
+                                 f"devices, need {self.machines}")
+            if self.shard > 1 \
+                    and self.mesh.shape.get(self.shard_axis) != self.shard:
+                raise ValueError(
+                    f"mesh axis {self.shard_axis!r} must hold "
+                    f"{self.shard} devices, has "
+                    f"{self.mesh.shape.get(self.shard_axis)}")
         self._fns: Dict[Any, Any] = {}
 
     @property
@@ -388,20 +416,51 @@ class LevelDispatcher:
         return greedy(self.objective, ids, pay, val, self.k,
                       sample=self.sample_leaf, key=key, engine=self.engine)
 
+    def _shard_leaf_body(self, ids, pay, val):
+        return shard_greedy(self.objective, ids, pay, val, self.k,
+                            axis=self.shard_axis, lanes=self.shard,
+                            tile_c=self.tile_c)
+
+    def _lane_spec(self) -> P:
+        """PartitionSpec sharding the stacked lanes dim over every mesh
+        axis, slowest lane digit first (tree root … level 0, then the
+        shard digit)."""
+        tail = (self.shard_axis,) if self.shard > 1 else ()
+        return P(tuple(reversed(self.tree_axes)) + tail)
+
     def _build_leaves(self):
-        if self.mesh is None or not self.radices:
+        if self.mesh is None:
+            if self.shard > 1:
+                # machines × shard grid: the shard dim is a NAMED vmap
+                # axis so the sharded engine's collectives run over it
+                inner = jax.vmap(self._shard_leaf_body,
+                                 axis_name=self.shard_axis)
+                f = jax.vmap(inner)          # over tree machines
+
+                def run(ids, pay, val):
+                    g = lambda x: x.reshape((self.machines, self.shard)
+                                            + x.shape[1:])
+                    out = jax.jit(f)(g(ids), g(pay), g(val))
+                    return jax.tree.map(
+                        lambda x: x.reshape((self.lanes,) + x.shape[2:]),
+                        out)
+                return run
+
             def run(ids, pay, val):
                 mids = jnp.arange(self.lanes, dtype=jnp.int32)
                 with kernel_ops.fused_replicas(self.lanes):
                     return jax.jit(jax.vmap(self._leaf_body))(
                         ids, pay, val, mids)
             return run
-        spec = P(tuple(reversed(self.tree_axes)))
+        spec = self._lane_spec()
         axes, radices = self.tree_axes, self.radices
 
         def body(ids, pay, val):
-            mid = _machine_flat_id(axes, radices)
-            s = self._leaf_body(ids[0], pay[0], val[0], mid)
+            if self.shard > 1:
+                s = self._shard_leaf_body(ids[0], pay[0], val[0])
+            else:
+                mid = _machine_flat_id(axes, radices)
+                s = self._leaf_body(ids[0], pay[0], val[0], mid)
             return jax.tree.map(lambda x: x[None], s)
 
         sol_spec = Solution(spec, spec, spec, spec, spec)
@@ -422,10 +481,18 @@ class LevelDispatcher:
 
         if self.mesh is None:
             f = body
+            in_axes = (0, None) if has_aug else (0,)
+            if self.shard > 1:
+                # shard lanes carry replicated machine state; map them as
+                # the FASTEST (last) grid dim so the lane order matches
+                # the leaves (the level body never reduces over them)
+                f = jax.vmap(f, in_axes=in_axes,
+                             axis_name=self.shard_axis)
             for ax in axes:          # innermost level = innermost vmap
-                in_axes = (0, None) if has_aug else (0,)
                 f = jax.vmap(f, in_axes=in_axes, axis_name=ax)
-            grouped_shape = tuple(reversed(radices))
+            grouped_shape = tuple(reversed(radices)) \
+                + ((self.shard,) if self.shard > 1 else ())
+            ndims = len(grouped_shape)
 
             def run(lane_sols, *aug):
                 # lane id's level-0 digit is LOW → row-major reshape with
@@ -437,10 +504,10 @@ class LevelDispatcher:
                     out = jax.jit(f)(grouped, *aug)
                 return jax.tree.map(
                     lambda x: x.reshape((self.lanes,)
-                                        + x.shape[len(radices):]), out)
+                                        + x.shape[ndims:]), out)
             return run
 
-        spec = P(tuple(reversed(axes)))
+        spec = self._lane_spec()
         sol_spec = Solution(spec, spec, spec, spec, spec)
 
         def shbody(sol_stacked, *aug):

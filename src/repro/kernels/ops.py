@@ -360,7 +360,19 @@ def count_pallas_dispatches(jaxpr) -> int:
     sub-jaxpr param (scan/while/cond/pjit/custom_* and closed calls), so
     transformed callees are never silently skipped. The measured (not
     modeled) dispatch column of bench_selection.py / bench_serve.py and
-    the streaming acceptance check (one dispatch per arrival batch)."""
+    the streaming acceptance check (one dispatch per arrival batch).
+
+    `shard_map` contract (the vmap contract's SPMD mirror): recursion
+    descends into the shard_map eqn's body jaxpr and counts its
+    pallas_calls ONCE — the count is PER-LANE, not multiplied by the
+    mesh size, because shard_map traces one lane's SPMD program that
+    every device executes in parallel. A sharded-tier leaf greedy
+    (kernels/shard_gains.py) over p lanes with T candidate tiles and k
+    steps therefore counts exactly k·T dispatches — the per-device
+    kernel-launch bill — NOT p·k·T, and the same body measured through
+    the nested-vmap simulation (axis_name vmap over a batch dim) counts
+    identically, so interpret-mode tests can assert the hardware bill
+    on one CPU (tests/test_shard_scale.py)."""
     total = 0
     for eqn in jaxpr.eqns:
         if eqn.primitive.name == "pallas_call":

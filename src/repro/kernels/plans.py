@@ -33,8 +33,9 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import json
+import math
 import os
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.kernels.rules import KernelRule, cache_itemsize
 from repro.runtime import flags
@@ -44,7 +45,7 @@ from repro.runtime import flags
 # on-chip matrix (and the compile cache) tight
 RES_TILE_N = 8
 
-ENGINES = ("step", "fused", "mega_stream", "mega_resident")
+ENGINES = ("step", "fused", "mega_stream", "mega_resident", "sharded")
 
 
 def resolve_backend(override: Optional[str] = None) -> str:
@@ -58,14 +59,20 @@ class EnginePlan:
     """The planner's verdict for one greedy invocation.
 
     engine        'step' | 'fused' | 'mega_stream' | 'mega_resident'
+                  | 'sharded' (cross-device tiled leaf,
+                  kernels/shard_gains.py)
     rule          the objective's KernelRule
     backend       resolved backend ('pallas' | 'interpret' | 'ref')
-    tier          raw fused_plan tier ('resident'|'streaming'|'fused'),
-                  None when the budget gate refused every cached engine
+    tier          raw fused_plan tier ('resident'|'streaming'|'fused'|
+                  'sharded'), None when the budget gate refused every
+                  cached engine
     block_n       row block for the per-step fused kernel (0 on ref)
     loop_block_n  row block for the streaming loop kernel
     dtype         cache storage dtype
                   ('float32'|'bfloat16'|'int8'|'uint32')
+    tile_c        sharded tier only: candidate tile each lane contributes
+                  per exchange round
+    lanes         sharded tier only: devices the ground set is split over
     """
     engine: str
     rule: KernelRule
@@ -74,10 +81,14 @@ class EnginePlan:
     block_n: int = 0
     loop_block_n: int = 0
     dtype: str = "float32"
+    tile_c: int = 0
+    lanes: int = 1
 
     @property
     def cached(self) -> bool:
-        return self.engine != "step"
+        # a cached (n, c) matrix exists; the sharded tier recomputes
+        # tiles per step like 'step', so it is NOT cached
+        return self.engine not in ("step", "sharded")
 
 
 def bucket_len(size: int, tile: int) -> int:
@@ -334,6 +345,74 @@ def stream_plan(n: int, l: int, b: int, d: Optional[int],
 
 
 # ---------------------------------------------------------------------------
+# sharded cross-device leaf plans (kernels/shard_gains.py, DESIGN
+# §Distributed scale)
+# ---------------------------------------------------------------------------
+
+# candidate-tile ladder for the sharded tier: wide tiles amortize the
+# per-tile all_gather/psum, narrow ones shrink the gathered working set
+SHARD_TILE_MIN = 8
+_SHARD_TILES = (512, 256, 128, 64, 32, 16, 8)
+
+
+def shard_bytes(n: int, d: int, lanes: int, tile_c: int) -> int:
+    """Modeled PER-DEVICE HBM bytes of one sharded greedy over an
+    n-element pool split across `lanes` devices: the lane's (n_s, d)
+    feature shard plus its ids/valid/state-row columns, and the gathered
+    (lanes·tile_c, d) candidate tile with its mask and global gains row.
+    No N×C term at all — that is the point of the tier."""
+    n_s = -(-(-(-n // lanes)) // tile_c) * tile_c    # padded lane shard
+    return 4 * n_s * (d + 3) + 4 * lanes * tile_c * (d + 2)
+
+
+def shard_plan(rule: KernelRule, n: int, d: Optional[int], lanes: int,
+               backend=None) -> Optional[dict]:
+    """Budget gate for the `sharded` engine tier, in the style of
+    `fused_plan`: the widest candidate tile whose per-device working set
+    (`shard_bytes`) fits the REPRO_FUSED_CACHE_MB per-device budget, or
+    None when the tier does not apply — bitmap rules (sharding the
+    ground axis would shard the universe words, i.e. the payload columns
+    themselves), a single lane (nothing to shard over), no feature dim,
+    or a pool so large even the minimal tile busts the budget.
+
+    Returns {'tile_c', 'bytes', 'dtype'} — the tier streams f32 features
+    through the same rule-parameterized gains kernels as the solo tiers
+    (the int8 ladder is a CACHE storage option; there is no cache here).
+    """
+    if rule.is_bitmap or lanes < 2 or not d:
+        return None
+    budget = flags.fused_cache_mb() * 2 ** 20
+    for tile in _SHARD_TILES:
+        need = shard_bytes(n, d, lanes, tile)
+        if need <= budget:
+            return {"tile_c": tile, "bytes": need, "dtype": "float32"}
+    return None
+
+
+def engine_hbm_bytes(plan: EnginePlan, n: int, c: int,
+                     d: Optional[int] = None) -> int:
+    """Modeled per-device HBM bytes one greedy invocation holds under
+    `plan` — the common currency `plan_tree` compares leaf and node
+    engines in. Solo tiers hold the whole pool (features or bitmap
+    words + ids/valid/state row) plus, for cached tiers, the padded
+    (n, c) matrix at the plan's storage width; the sharded tier holds
+    only its `shard_bytes` slice (its `n` is the GLOBAL pool)."""
+    if plan.engine == "sharded":
+        return shard_bytes(n, d or 0, plan.lanes, plan.tile_c)
+    if plan.rule.is_bitmap:
+        feat = 4 * (c * n + 2 * c + n)      # (C, W) bits + ids/valid + row
+    else:
+        feat = 4 * (n * (d or 0) + 3 * n)
+    if not plan.cached:
+        return feat
+    if plan.backend == "ref":
+        n_pad, c_pad = n, c
+    else:
+        n_pad, c_pad = bucket_len(n, 256), bucket_len(c, 128)
+    return feat + n_pad * c_pad * cache_itemsize(plan.dtype)
+
+
+# ---------------------------------------------------------------------------
 # serving admission plans (serving/engine.py, DESIGN §Serving)
 # ---------------------------------------------------------------------------
 
@@ -534,7 +613,8 @@ def plan_override(fp: Optional[dict]):
 def select_engine(rule: KernelRule, n: int, c: int,
                   d: Optional[int] = None, *, requested: str = "auto",
                   sampling: bool = False, constrained: bool = False,
-                  backend: Optional[str] = None) -> EnginePlan:
+                  backend: Optional[str] = None,
+                  lanes: int = 1) -> EnginePlan:
     """Resolve the selection engine for one greedy invocation.
 
     n: ground rows (universe WORDS for bitmap rules), c: candidates,
@@ -553,6 +633,15 @@ def select_engine(rule: KernelRule, n: int, c: int,
       fused  the cached per-step engine even under sampling; step when
              the cache busts the budget
       step   always the legacy recompute-per-step path
+
+    `lanes` > 1 declares that the caller CAN split this greedy's ground
+    set over that many mesh devices (kernels/shard_gains.py). It extends
+    the escalation ladder past the cache budget: resident → streaming →
+    fused → SHARDED — when every cached tier is refused and the shard
+    gate admits the pool, the plan comes back as engine='sharded' with
+    the gate's tile_c instead of falling all the way to 'step'. Sampling
+    and constrained selection stay on the solo paths (their per-step
+    host logic has no cross-device protocol).
     """
     if requested not in ("auto", "mega", "fused", "step"):
         raise ValueError(f"unknown engine {requested!r}; "
@@ -571,7 +660,17 @@ def select_engine(rule: KernelRule, n: int, c: int,
     elif fp.get("tier") == "step":
         return step
     if fp is None:
-        return step                         # paper's memory-capped regime
+        # paper's memory-capped regime: no cached tier fits one device —
+        # escalate to the cross-device sharded tier when the caller
+        # offered lanes and the shard gate admits the pool
+        if (lanes > 1 and requested in ("auto", "mega")
+                and not sampling and not constrained):
+            sp = shard_plan(rule, n, d, lanes, backend=b)
+            if sp is not None:
+                return EnginePlan("sharded", rule, b, tier="sharded",
+                                  dtype=sp["dtype"],
+                                  tile_c=sp["tile_c"], lanes=lanes)
+        return step
     mega_ok = (requested in ("auto", "mega") and not sampling
                and not constrained and fp["tier"] in ("resident",
                                                       "streaming"))
@@ -585,3 +684,158 @@ def select_engine(rule: KernelRule, n: int, c: int,
     return EnginePlan(engine, rule, b, tier=fp["tier"],
                       block_n=fp["block_n"],
                       loop_block_n=fp["loop_block_n"], dtype=fp["dtype"])
+
+
+# ---------------------------------------------------------------------------
+# the tree planner: memory model → accumulation-tree shape
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TreePlan:
+    """The planner's verdict for one distributed selection: how `lanes`
+    devices are split between tree machines and per-leaf shards, and the
+    engines each stage runs.
+
+    radices     per-level branching, innermost (leaf-adjacent) first —
+                the LevelDispatcher radices; () means ONE machine (all
+                devices shard a single leaf)
+    shard       devices cooperating on EACH leaf greedy (the sharded
+                tier's mesh axis size; 1 = solo leaves)
+    leaf_plan   EnginePlan for the leaf greedys
+    node_plan   EnginePlan for the accumulation-node greedys ((b·k)-pool)
+    leaf_n      elements each leaf machine owns (pre-shard split)
+    peak_bytes  max modeled per-device HBM over leaf and node stages
+    cost        planner objective (BSP call counts from
+                AccumulationTree.cost_model; lower is better)
+    model       the cost_model dict the plan was validated against
+                ({} for the single-machine shape it cannot express)
+    """
+    radices: Tuple[int, ...]
+    shard: int
+    leaf_plan: EnginePlan
+    node_plan: EnginePlan
+    leaf_n: int
+    peak_bytes: int
+    cost: float
+    model: dict
+
+    @property
+    def machines(self) -> int:
+        return math.prod(self.radices)
+
+    @property
+    def branching(self) -> int:
+        return max(self.radices) if self.radices else 1
+
+    @property
+    def lanes(self) -> int:
+        return self.machines * self.shard
+
+
+def _radix_options(m: int):
+    """Uniform-branching level stacks multiplying to m, innermost first:
+    every (b,)·L with b^L == m — includes the flat RandGreedi shape
+    (m,) and the deepest binary stack when m is a power of two."""
+    if m == 1:
+        return [()]
+    opts = []
+    for b in range(2, m + 1):
+        level, total = 0, 1
+        while total < m:
+            total *= b
+            level += 1
+        if total == m:
+            opts.append((b,) * level)
+    return opts
+
+
+def plan_tree(rule: KernelRule, n: int, d: Optional[int], k: int,
+              lanes: int, budget_mb: Optional[int] = None,
+              backend: Optional[str] = None,
+              words: Optional[int] = None) -> Optional[TreePlan]:
+    """Pick the accumulation-tree shape for `lanes` devices from the
+    same dtype-aware memory model the engine tiers gate on — the paper's
+    core move (§4/§6.4): choose branching and levels so every tree node
+    fits per-device memory, instead of taking the tree as user input.
+
+    Enumerates shard ∈ divisors(lanes) (devices cooperating per leaf)
+    and every uniform radix stack over the remaining m = lanes/shard
+    machines — from the flat RandGreedi (m,) through the deepest stack —
+    and keeps the shapes whose leaf AND node stages fit `budget_mb`
+    (default REPRO_FUSED_CACHE_MB) per device:
+
+      leaf stage   shard == 1: `select_engine` on the ceil(n/m)-pool
+                   (folding in autotune-cache winners, like any solo
+                   call), costed by `engine_hbm_bytes`;
+                   shard > 1: the sharded tier via `select_engine(...,
+                   lanes=shard)` — the shape is only feasible if the
+                   escalation actually fires
+      node stage   `select_engine` on the (b·k)-candidate accumulation
+                   pool — the paper's b·k per-node memory term
+
+    Feasible shapes are ranked by BSP cost from
+    `AccumulationTree.cost_model` (leaf compute ÷ shard, since shard
+    devices split each gains call, plus interior compute and comm),
+    with fewer levels then more sharding as tie-breaks. The model's
+    structural terms are asserted against the enumerated shape —
+    the satellite wiring that keeps cost_model honest. Returns None
+    only when NO shape fits the budget (the instance is unsolvable at
+    this lane count under this model).
+
+    ``words``: bitmap rules plan their ground axis over universe WORDS
+    (d is None); the shard shapes are then naturally infeasible and the
+    planner only sizes the solo tree."""
+    from repro.core.tree import AccumulationTree    # lazy: core→kernels
+
+    if rule.is_bitmap and not words:
+        raise ValueError("bitmap rules need words= for tree planning")
+    b = resolve_backend(backend)
+    budget = (budget_mb if budget_mb is not None
+              else flags.fused_cache_mb()) * 2 ** 20
+    obj = "kmedoid" if rule.fold == "min" else "coverage"
+    rows = (lambda c: words) if rule.is_bitmap else (lambda c: c)
+    best = None
+    for shard in (s for s in range(1, lanes + 1) if lanes % s == 0):
+        m = lanes // shard
+        leaf_n = -(-n // m)
+        # leaf stage: solo plan, or the sharded tier over `shard` devices
+        if shard == 1:
+            lp = select_engine(rule, rows(leaf_n), leaf_n, d, backend=b)
+        else:
+            lp = select_engine(rule, rows(leaf_n), leaf_n, d, backend=b,
+                               lanes=shard)
+            if lp.engine != "sharded":
+                continue    # escalation didn't fire: solo shapes cover it
+        leaf_bytes = engine_hbm_bytes(lp, rows(leaf_n), leaf_n, d)
+        if leaf_bytes > budget:
+            continue
+        for radices in _radix_options(m):
+            if radices:
+                br = radices[0]
+                nc = br * k
+                np_ = select_engine(rule, rows(nc), nc, d, backend=b)
+                node_bytes = engine_hbm_bytes(np_, rows(nc), nc, d)
+                if node_bytes > budget:
+                    continue
+                model = AccumulationTree(m, br).cost_model(
+                    n, k, 1.0, objective=obj)
+                # satellite wiring: the BSP model must agree with the
+                # enumerated structure, or the planner (and the model)
+                # is lying about the tree it costs
+                assert model["levels"] == len(radices), (model, radices)
+                assert model["elements_per_interior"] == br * k
+                cost = (model["compute_cost"] / shard
+                        + model["comm_cost"])
+            else:
+                np_, node_bytes = lp, 0
+                model = {}
+                cost = ((n ** 2) * k if obj == "kmedoid"
+                        else n * k) / shard
+            cand = TreePlan(radices, shard, lp, np_, leaf_n,
+                            max(leaf_bytes, node_bytes), cost, model)
+            key = (cand.cost, len(cand.radices), -cand.shard)
+            if best is None or key < (best.cost, len(best.radices),
+                                      -best.shard):
+                best = cand
+    return best

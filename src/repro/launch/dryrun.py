@@ -1,6 +1,6 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512")
+from repro.launch.mesh import force_host_devices
+
+force_host_devices(512, count_flag=None)
 # ^ MUST precede any jax import: jax locks the device count on first init.
 """Multi-pod dry-run: lower + compile EVERY (arch × shape × mesh) cell and
 record memory / FLOPs / collective-bytes for the roofline analysis.
@@ -22,6 +22,7 @@ O(b·k²)). The full-size compile still provides memory_analysis (fits-check)
 and the real collective schedule.
 """
 import argparse
+import os
 import json
 import re
 import time

@@ -1,13 +1,6 @@
-import os
-import sys
+from repro.launch.mesh import force_host_devices
 
-if "--mesh" in sys.argv:                   # pragma: no cover - env setup
-    _lanes = "8"
-    if "--lanes" in sys.argv:
-        _lanes = sys.argv[sys.argv.index("--lanes") + 1]
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={_lanes}")
+force_host_devices(8, trigger="--mesh")     # pragma: no cover - env setup
 # ^ MUST precede any jax import: jax locks the device count on first init.
 """Fault-tolerant distributed selection driver (DESIGN §Fault tolerance).
 

@@ -1,6 +1,7 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512")
+from repro.launch.mesh import force_host_devices
+
+force_host_devices(512, count_flag=None)
+# ^ MUST precede any jax import: jax locks the device count on first init.
 """Perf hillclimbing harness (EXPERIMENTS §Perf).
 
 Each experiment = (cell, variant-transform). For every variant we re-lower
@@ -12,6 +13,7 @@ flags so baselines stay paper-faithful.
     PYTHONPATH=src python -m repro.launch.hillclimb --exp llama4_token_exchange
 """
 import argparse
+import os
 import dataclasses
 import json
 import time

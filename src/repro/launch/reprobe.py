@@ -1,6 +1,7 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512")
+from repro.launch.mesh import force_host_devices
+
+force_host_devices(512, count_flag=None)
+# ^ MUST precede any jax import: jax locks the device count on first init.
 """Surgical probe refresh: re-run the cost probes (flops/collective/bytes
 fits) for already-compiled dry-run cells and merge into their JSONs —
 avoids re-compiling the full-size cell when only the probe schema changed.
@@ -8,6 +9,7 @@ avoids re-compiling the full-size cell when only the probe schema changed.
     PYTHONPATH=src python -m repro.launch.reprobe [--only arch:shape]
 """
 import argparse
+import os
 import glob
 import json
 import time

@@ -1,13 +1,6 @@
-import os
-import sys
+from repro.launch.mesh import force_host_devices
 
-if "--distributed" in sys.argv:            # pragma: no cover - env setup
-    _lanes = "4"
-    if "--lanes" in sys.argv:
-        _lanes = sys.argv[sys.argv.index("--lanes") + 1]
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={_lanes}")
+force_host_devices(4, trigger="--distributed")  # pragma: no cover - env
 # ^ MUST precede any jax import: jax locks the device count on first init.
 """Streaming selection driver — the online counterpart of summarize.py.
 

@@ -154,37 +154,76 @@ class SelectionSupervisor:
                sample_leaf: int = 0, sample_level: int = 0,
                seed: Optional[int] = None,
                augment: Optional[jax.Array] = None,
-               resume: bool = False) -> Tuple[Solution, Dict[str, Any]]:
+               resume: bool = False,
+               shard: int = 0) -> Tuple[Solution, Dict[str, Any]]:
         """Run supervised distributed GreedyML over ``lanes`` machines.
 
         ``mesh``/``tree_axes``: a real mesh (one device per lane) runs
         every stage through shard_map; None simulates the lanes on the
-        local device (nested vmap, identical math). ``resume=True``
-        restores the latest checkpoint (any tree epoch) and continues
-        from the next level. Returns ``(solution, info)`` where info
-        carries the recovery log, the initial and final tree shapes, and
-        the surviving worker set."""
+        local device (nested vmap, identical math). ``branching=0``
+        with no mesh hands the tree shape to the MEMORY-MODEL planner
+        (`plans.plan_tree`): branching, levels, and per-leaf sharding
+        come from the per-device budget instead of the caller —
+        the paper's tree-selection step. ``shard`` > 1 forces that many
+        lanes to cooperate per leaf through the sharded cross-device
+        engine (0 = planner's choice / solo). A mesh may carry a
+        ``'shard'`` axis holding the shard lanes; ``tree_axes`` then
+        names only the tree levels. ``resume=True`` restores the latest
+        checkpoint (any tree epoch) and continues from the next level.
+        Returns ``(solution, info)`` where info carries the recovery
+        log, the initial and final tree shapes, and the surviving
+        worker set."""
+        tile_c = 0
         if mesh is not None:
             tree_axes = tuple(tree_axes)
             radices = tuple(mesh.shape[a] for a in tree_axes)
-            if math.prod(radices) != lanes:
-                raise ValueError(f"mesh holds {math.prod(radices)} lanes, "
-                                 f"asked for {lanes}")
-            b = radices[0]
-        else:
-            b = branching or lanes
-            levels = max(1, round(math.log(lanes, b))) if lanes > 1 else 0
-            if b ** levels != lanes:
-                raise ValueError(f"lanes ({lanes}) must be branching^levels "
-                                 f"(b={b})")
+            shard = int(mesh.shape.get("shard", shard or 1)) or 1
+            if math.prod(radices) * shard != lanes:
+                raise ValueError(
+                    f"mesh holds {math.prod(radices) * shard} lanes, "
+                    f"asked for {lanes}")
+            b = radices[0] if radices else 1
+        elif branching or shard:
+            shard = shard or 1
+            if lanes % shard:
+                raise ValueError(f"lanes ({lanes}) must divide by "
+                                 f"shard ({shard})")
+            m = lanes // shard
+            b = branching or m
+            levels = max(1, round(math.log(m, b))) if m > 1 else 0
+            if b ** levels != m:
+                raise ValueError(f"machines ({m}) must be "
+                                 f"branching^levels (b={b})")
             radices = (b,) * levels
             tree_axes = None
+        else:
+            # no tree given: the memory model picks branching, levels,
+            # and per-leaf sharding (the paper's tree-selection step)
+            from repro.kernels.plans import plan_tree
+            rule = objective.rule
+            d = None if rule.is_bitmap else payloads.shape[1]
+            w = payloads.shape[1] if rule.is_bitmap else None
+            tp = plan_tree(rule, ids.shape[0], d, k, lanes,
+                           backend=objective.backend, words=w)
+            if tp is None:
+                raise ValueError(
+                    f"no accumulation tree over {lanes} lanes fits the "
+                    "per-device budget for this instance "
+                    "(plans.plan_tree found no feasible shape)")
+            radices, shard, b = tp.radices, tp.shard, tp.branching
+            tile_c = tp.leaf_plan.tile_c
+            tree_axes = None
+            self._log("plan", radices=list(radices), shard=shard,
+                      peak_bytes=tp.peak_bytes,
+                      leaf_engine=tp.leaf_plan.engine,
+                      node_engine_plan=tp.node_plan.engine)
 
         disp = LevelDispatcher(objective, k, radices, mesh=mesh,
                                tree_axes=tree_axes, engine=engine,
                                node_engine=node_engine,
                                sample_leaf=sample_leaf,
-                               sample_level=sample_level, seed=seed)
+                               sample_level=sample_level, seed=seed,
+                               shard=shard, tile_c=tile_c)
         il, pl, vl = shard_lanes(jnp.asarray(ids), jnp.asarray(payloads),
                                  jnp.asarray(valid), lanes)
         workers = list(range(lanes))
@@ -239,6 +278,8 @@ class SelectionSupervisor:
                                    "workers": workers,
                                    "radices": list(disp.radices),
                                    "branching": b, "k": k,
+                                   "shard": disp.shard,
+                                   "tile_c": disp.tile_c,
                                    "preemptive": preempt},
                             keep=self.keep)
                         self._log("checkpoint", level=next_stage,
@@ -249,6 +290,8 @@ class SelectionSupervisor:
                 info = {"tree": tree0,
                         "final_tree": (disp.lanes, b, disp.num_levels),
                         "degraded": epoch > 0, "epochs": epoch + 1,
+                        "shard": disp.shard,
+                        "radices": tuple(disp.radices),
                         "workers": list(workers), "events": self.events}
                 return sol, info
             except WorkerFailure as e:
@@ -257,7 +300,11 @@ class SelectionSupervisor:
                 self._log("failure", level=next_stage, epoch=epoch,
                           lane=lane, error=str(e), attempt=restarts)
                 if restarts > self.max_restarts:
-                    if lane is None or len(workers) <= 1:
+                    # sharded leaves have no degraded-tree story: the
+                    # shard lanes of one machine hold SLICES of one
+                    # pool, not poolable solutions — losing one loses
+                    # the partition, so level replay is the only tier
+                    if lane is None or len(workers) <= 1 or disp.shard > 1:
                         raise
                     # ---- repeated failure of one lane → degrade ---------
                     (disp, il, pl, vl, workers, epoch, state,
@@ -350,13 +397,15 @@ class SelectionSupervisor:
                                "manifest.json")) as f:
             extra = json.load(f)["extra"]
         radices = tuple(extra["radices"])
-        lanes = int(math.prod(radices)) if radices else 1
+        shard = int(extra.get("shard", 1))
+        tile_c = int(extra.get("tile_c", 0))
+        lanes = (int(math.prod(radices)) if radices else 1) * shard
         b = int(extra["branching"])
         mesh = None
-        if use_mesh and radices:
-            from repro.launch.mesh import make_machine_mesh
-            mesh = make_machine_mesh(lanes, b,
-                                     axis_prefix="deg" if epoch else "lvl")
+        if use_mesh and (radices or shard > 1):
+            from repro.launch.mesh import make_tree_mesh
+            mesh = make_tree_mesh(radices, shard,
+                                  axis_prefix="deg" if epoch else "lvl")
         example = empty_lane_solutions(
             lanes, k, jnp.zeros((1,) + payloads.shape[1:], payloads.dtype))
         state, manifest = manager.restore(d, example, step=last)
@@ -364,7 +413,8 @@ class SelectionSupervisor:
         disp = LevelDispatcher(objective, k, radices, mesh=mesh,
                                engine=engine, node_engine=node_engine,
                                sample_leaf=sample_leaf,
-                               sample_level=sample_level, seed=seed)
+                               sample_level=sample_level, seed=seed,
+                               shard=shard, tile_c=tile_c)
         self._log("resume", level=stage, epoch=epoch)
         return (disp, state, stage + 1, list(manifest["extra"]["workers"]),
                 epoch, b)

@@ -90,3 +90,40 @@ def test_cost_model_tradeoffs(obj):
     assert ml["elements_per_interior"] < rg["elements_per_interior"]
     assert ml["comm_cost"] < rg["comm_cost"]
     assert ml["levels"] == 6 and rg["levels"] == 1
+
+
+def test_cost_model_bsp_terms_exact():
+    """Table 1, term by term: per-machine element/call counts, the BSP
+    compute/comm split, and linear delta scaling — the exact quantities
+    plans.plan_tree validates feasible tree shapes against."""
+    n, k, delta = 4096, 32, 1.0
+    t = AccumulationTree(16, 4)                 # m = b^L: 16 = 4^2
+    mdl = t.cost_model(n, k, delta)
+    assert (mdl["machines"], mdl["branching"], mdl["levels"]) == (16, 4, 2)
+    assert mdl["elements_per_leaf"] == n / 16
+    assert mdl["calls_per_leaf"] == n * k / 16
+    assert mdl["elements_per_interior"] == k * 4          # the b*k pool
+    assert mdl["calls_per_interior"] == (k * 4) * k
+    assert mdl["calls_critical_path"] == n * k / 16 + 2 * (k * 4) * k
+    assert mdl["compute_cost"] == k * (n / 16 + 2 * 4 * k)
+    assert mdl["comm_cost"] == k * 2 * 4
+    km = t.cost_model(n, k, delta, objective="kmedoid")
+    assert km["compute_cost"] == (n / 16) ** 2 * k + 2 * (k * 4) ** 2 * k
+    half = t.cost_model(n, k, 0.5)
+    assert half["compute_cost"] == 0.5 * mdl["compute_cost"]
+    assert half["comm_cost"] == 0.5 * mdl["comm_cost"]
+
+
+@given(m=st.integers(2, 64), b=st.integers(2, 8))
+@settings(max_examples=40, deadline=None)
+def test_cost_model_structure_matches_tree(m, b):
+    """The structural terms plan_tree asserts on hold for every (m, b):
+    levels match num_levels and the interior pool is always b*k."""
+    t = AccumulationTree(m, b)
+    mdl = t.cost_model(10_000, 64, 2.0)
+    assert mdl["levels"] == t.num_levels
+    assert mdl["elements_per_interior"] == 64 * b
+    assert mdl["calls_per_interior"] == 64 * mdl["elements_per_interior"]
+    assert mdl["calls_critical_path"] == (mdl["calls_per_leaf"]
+                                          + t.num_levels
+                                          * mdl["calls_per_interior"])
