@@ -95,12 +95,49 @@ def sweep(cfg, backend=None, seed=0):
             queries_per_s=round(len(res) / max(wall, 1e-9), 1),
             batches=len(sizes),
             mean_admitted=round(float(np.mean(sizes)), 2),
-            per_size={t: dict(p50_ms=round(s["p50_ms"], 2),
-                              p99_ms=round(s["p99_ms"], 2),
+            per_size={t: dict(p50_ms=_round2(s["p50_ms"]),
+                              p99_ms=_round2(s["p99_ms"]),
                               served=s["completed"])
                       for t, s in snap["tenants"].items()},
         )
     return rows
+
+
+def _round2(v):
+    """Round a latency percentile, passing None (tenant with zero
+    completed queries) through so the row stays valid JSON."""
+    return None if v is None else round(v, 2)
+
+
+def dedup_arm(cfg, b=4, n=96, seed=0):
+    """RAG retrieval-dedup workload: tenants submit MMR queries over
+    overlapping retrieval pools (shared corpus, per-tenant top-n slices),
+    so the engine must batch rule-compatible λ groups together while
+    keeping different-λ tenants apart (their KernelRule — and hence the
+    serve compatibility key — differs). Reports queries/s, selections
+    per λ group, and the measured dispatches per admitted batch."""
+    eng = QueryEngine(backend="interpret", max_batch=b,
+                      queue_cap=4 * b + 1)
+    rng = np.random.default_rng(seed)
+    corpus = rng.normal(size=(4 * n, cfg["d"])).astype(np.float32)
+    lams = (0.3, 0.3, 0.7, 0.7)          # two λ groups of two tenants
+    t0 = time.time()
+    for i, lam in enumerate(lams):
+        lo = i * n // 2                  # 50% pool overlap with neighbor
+        pool = np.asarray(corpus[lo:lo + n])
+        q = Query("mmr", cfg["k"], np.arange(lo, lo + n, dtype=np.int32),
+                  pool, np.ones((n,), bool), tenant=f"lam{lam}",
+                  params=dict(lam=lam))
+        eng.submit(q)
+    res = eng.drain()
+    wall = time.time() - t0
+    snap = eng.metrics.snapshot()
+    return dict(queries=len(res),
+                queries_per_s=round(len(res) / max(wall, 1e-9), 1),
+                batches=snap["total_batches"],
+                dispatches_per_batch=[bt["dispatches"]
+                                      for bt in eng.metrics.batches],
+                lambda_groups=sorted({t for t in snap["tenants"]}))
 
 
 def dispatch_arm(cfg, b=4, n=96):
@@ -128,12 +165,15 @@ def main(argv=None):
     rows = sweep(cfg, backend=args.backend, seed=args.seed)
     disp = dispatch_arm(cfg, b=2 if args.smoke else 4,
                         n=cfg["sizes"][0])
+    dedup = dedup_arm(cfg, b=2 if args.smoke else 4, n=cfg["sizes"][0],
+                      seed=args.seed)
     import jax
     results = dict(config=dict(cfg, backend=args.backend,
                                smoke=args.smoke,
                                device=jax.default_backend()),
                    by_admission_cap=rows,
-                   dispatches_per_batch_interpret=disp)
+                   dispatches_per_batch_interpret=disp,
+                   retrieval_dedup=dedup)
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
     print("cap,queries/s,mean_admitted,batches,p50_ms(by size)")
@@ -142,6 +182,9 @@ def main(argv=None):
         print(f"{cap},{r['queries_per_s']},{r['mean_admitted']},"
               f"{r['batches']},{p50s}")
     print(f"dispatches/batch (interpret): {disp}")
+    print(f"retrieval-dedup (mmr): {dedup['queries']} queries, "
+          f"{dedup['batches']} batches, "
+          f"dispatches={dedup['dispatches_per_batch']}")
     print(f"wrote {OUT_PATH}")
     return results
 

@@ -74,11 +74,20 @@ else:
 print(f"autotune cache reused: {key} -> {tuned.engine}/{tuned.dtype}")
 PY
 
+echo "== examples (interpret) =="
+# the runnable docs: quickstart + the distributed summarization example
+# must keep working against the current API surface (imports here rot
+# silently otherwise — nothing else exercises the example scripts)
+REPRO_KERNEL_BACKEND=interpret python examples/quickstart.py
+REPRO_KERNEL_BACKEND=interpret python examples/data_summarization.py
+
 echo "== fault tolerance (supervised runtime, 8-device mesh) =="
 # level-replay bit-identity, the degraded-tree 0.95x quality band, and a
 # supervised streaming pass — over a real 8-lane host mesh (faultrun sets
-# xla_force_host_platform_device_count before importing jax)
-python -m pytest -q tests/test_fault_tolerance.py
+# xla_force_host_platform_device_count before importing jax). -m ""
+# overrides pytest.ini's "not slow" default: this dedicated stage is
+# where the slow subprocess mesh test runs
+python -m pytest -q -m "" tests/test_fault_tolerance.py
 python -m repro.launch.faultrun --smoke --mesh --lanes 8 --branching 2
 
 echo "== serving engine (multi-tenant batched queries, interpret) =="
@@ -99,8 +108,9 @@ echo "== distributed scale (sharded tier + tree planner) =="
 # both be refused so selection is forced through the sharded cross-device
 # tier and the memory-model tree planner; the bench executes witness
 # instances on a real 8-lane host mesh (bit-identical to solo greedy)
-# and writes the memory-ceiling artifact
-python -m pytest -q tests/test_shard_scale.py
+# and writes the memory-ceiling artifact. -m "" runs the slow subprocess
+# mesh test excluded from the default tier-1 lane
+python -m pytest -q -m "" tests/test_shard_scale.py
 python benchmarks/bench_memory_limits.py --distributed --smoke
 test -s benchmarks/BENCH_distributed.json || {
     echo "FAIL: BENCH_distributed.json was not written"

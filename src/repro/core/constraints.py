@@ -10,6 +10,22 @@ with these unchanged.
 per-category capacities (e.g. "at most c_j documents per language/source
 in the coreset"); Greedy is 1/2-approximate under matroid constraints.
 Cardinality is the 1-category special case (handled natively by k).
+
+``Knapsack`` — per-element costs and a budget B (DESIGN §Constraints):
+state is the () f32 spent-so-far scalar, feasibility is
+spent + cost[i] ≤ B. Knapsack families are hereditary (dropping elements
+never raises the cost), so the tree bound carries over; the streaming
+leaf uses cost-ratio sieve admission (streaming/sieve.py).
+
+``Composite`` — the AND of several constraints (tuple state), e.g.
+knapsack × partition matroid; an intersection of hereditary families is
+hereditary.
+
+Constraints are POOL-BOUND: ``categories``/``costs`` index by candidate
+POSITION in the pool being selected from. For distributed selection
+(where accumulation nodes see gathered unions in a different order) use
+``KnapsackSpec`` — global-id-indexed costs with ``bind(ids)`` producing
+the pool-bound constraint each greedy call needs.
 """
 from __future__ import annotations
 
@@ -52,3 +68,80 @@ def uniform_matroid(n: int, k: int) -> PartitionMatroid:
     """Cardinality-k as a 1-category partition matroid (for tests)."""
     return PartitionMatroid(jnp.zeros((n,), jnp.int32),
                             jnp.asarray([k], jnp.int32))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Knapsack:
+    """costs: (n,) f32 per-element costs (pool-positional, ≥ 0);
+    budget: () f32. State is the spent-so-far scalar — fixed shape
+    regardless of n or how many elements are selected."""
+
+    costs: jax.Array
+    budget: jax.Array
+
+    def tree_flatten(self):
+        return (self.costs, self.budget), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def init_state(self) -> jax.Array:
+        return jnp.zeros((), jnp.float32)
+
+    def feasible_mask(self, spent: jax.Array) -> jax.Array:
+        """(n,) bool: adding element i keeps total cost within budget."""
+        return spent + self.costs <= self.budget
+
+    def update(self, spent: jax.Array, element_index) -> jax.Array:
+        return spent + jnp.take(self.costs, element_index)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Composite:
+    """Intersection (AND) of hereditary constraints, e.g. knapsack ×
+    partition matroid. State is the tuple of part states — the greedy
+    drivers' `jax.tree.map` accept-masking handles it untouched."""
+
+    parts: Tuple
+
+    def tree_flatten(self):
+        return (tuple(self.parts),), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def init_state(self) -> Tuple:
+        return tuple(p.init_state() for p in self.parts)
+
+    def feasible_mask(self, state: Tuple) -> jax.Array:
+        mask = self.parts[0].feasible_mask(state[0])
+        for p, s in zip(self.parts[1:], state[1:]):
+            mask = mask & p.feasible_mask(s)
+        return mask
+
+    def update(self, state: Tuple, element_index) -> Tuple:
+        return tuple(p.update(s, element_index)
+                     for p, s in zip(self.parts, state))
+
+
+@dataclasses.dataclass
+class KnapsackSpec:
+    """Global knapsack for distributed selection: ``costs`` indexed by
+    GLOBAL element id (replicated on every lane), one shared budget.
+    ``bind(ids)`` gathers the pool-bound per-position costs, so leaves
+    (lane-local shards) and accumulation nodes (gathered b·k unions in
+    gather order) each get a correctly aligned ``Knapsack``. Invalid slots
+    (id = −1) bind at cost 0 — they are masked by ``valid`` anyway."""
+
+    costs: jax.Array            # (n_total,) f32, id-indexed
+    budget: float
+
+    def bind(self, ids: jax.Array) -> Knapsack:
+        safe = jnp.maximum(ids, 0)
+        pool = jnp.where(ids >= 0, jnp.take(self.costs, safe), 0.0)
+        return Knapsack(pool.astype(jnp.float32),
+                        jnp.asarray(self.budget, jnp.float32))

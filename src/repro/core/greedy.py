@@ -176,7 +176,8 @@ def greedy(objective, ids: jax.Array, payloads: jax.Array, valid: jax.Array,
                                & accept)
         if constraint is not None:
             new_counts = constraint.update(ccounts, best)
-            ccounts = jnp.where(accept, new_counts, ccounts)
+            ccounts = jax.tree.map(
+                lambda a, b: jnp.where(accept, a, b), new_counts, ccounts)
         evals = evals + n_evals
         out = (jnp.where(accept, ids[best], -1),
                jnp.where(accept, payload, jnp.zeros_like(payload)),
@@ -262,7 +263,8 @@ def _greedy_fused(objective, state, cache, ids, payloads, valid, k,
                                & accept)
         if constraint is not None:
             new_counts = constraint.update(ccounts, best)
-            ccounts = jnp.where(accept, new_counts, ccounts)
+            ccounts = jax.tree.map(
+                lambda a, b: jnp.where(accept, a, b), new_counts, ccounts)
         prev = jnp.where(accept, best.astype(jnp.int32), jnp.int32(-1))
         evals = evals + n_evals
         out = (jnp.where(accept, ids[best], -1),

@@ -99,7 +99,8 @@ def accumulate_one_level(objective, s_prev: Solution, k: int,
                          tree_axes: Sequence[str], radices: Sequence[int],
                          lvl: int, aug: Optional[jax.Array] = None,
                          sample_level: int = 0, node_engine: str = "auto",
-                         seed: Optional[int] = None
+                         seed: Optional[int] = None,
+                         constraint=None
                          ) -> Tuple[Solution, jax.Array, jax.Array]:
     """ONE accumulation round of Algorithm 3.1: gather the child solutions
     over ``tree_axes[lvl]``, run the node-local Greedy on the b·k union,
@@ -116,6 +117,12 @@ def accumulate_one_level(objective, s_prev: Solution, k: int,
     dispatches once per level, checkpointing the per-lane state in
     between; `accumulate_levels` keeps the monolithic whole-tree SPMD
     program by looping over it.
+
+    ``constraint``: optional hereditary constraint SPEC (e.g.
+    core.constraints.KnapsackSpec) — ``constraint.bind(u_ids)`` aligns the
+    global-id-indexed spec to this node's gathered union, so the same
+    budget binds identically at every tree node (heredity is all Theorem
+    4.4 needs, so the α/(L+1) bound carries over unchanged).
     """
     ax = tree_axes[lvl]
     u_ids = lax.all_gather(s_prev.ids, ax, axis=0, tiled=True)
@@ -134,7 +141,9 @@ def accumulate_one_level(objective, s_prev: Solution, k: int,
     s_new = greedy(objective, u_ids, u_pay, u_val, k,
                    ground=ground, ground_valid=ground_valid,
                    sample=sample_level, key=lvl_key,
-                   engine=node_engine)
+                   engine=node_engine,
+                   constraint=(constraint.bind(u_ids)
+                               if constraint is not None else None))
     prev_score = replay_value(objective, s_prev.payloads,
                               s_prev.valid, ground, ground_valid)
     s_out = select_better(
@@ -149,7 +158,8 @@ def accumulate_levels(objective, s_prev: Solution, k: int,
                       sample_level: int = 0,
                       node_engine: str = "auto",
                       carry_prev: Optional[Solution] = None,
-                      seed: Optional[int] = None) -> Solution:
+                      seed: Optional[int] = None,
+                      constraint=None) -> Solution:
     """The accumulation rounds of Algorithm 3.1 as a standalone SPMD
     function: starting from ANY per-lane solution `s_prev` (a leaf Greedy
     for greedyml proper, a sieve summary for the streaming continuous
@@ -174,7 +184,8 @@ def accumulate_levels(objective, s_prev: Solution, k: int,
         s_prev, ground, ground_valid = accumulate_one_level(
             objective, s_prev, k, tree_axes, radices, lvl,
             aug=aug_levels[lvl] if aug_levels is not None else None,
-            sample_level=sample_level, node_engine=node_engine, seed=seed)
+            sample_level=sample_level, node_engine=node_engine, seed=seed,
+            constraint=constraint)
     if carry_prev is not None:
         carry_score = replay_value(objective, carry_prev.payloads,
                                    carry_prev.valid, ground, ground_valid)
@@ -191,7 +202,8 @@ def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
                       sample_leaf: int = 0, sample_level: int = 0,
                       engine: str = "auto",
                       node_engine: Optional[str] = None,
-                      seed: Optional[int] = None):
+                      seed: Optional[int] = None,
+                      constraint=None):
     """Returns the per-lane SPMD function (for use inside shard_map).
 
     ``sample_leaf`` / ``sample_level``: stochastic-greedy sampling at the
@@ -203,7 +215,10 @@ def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
     node shape lands on the VMEM-resident megakernel tier, one dispatch
     per node.
     ``seed``: static int reseeding the stochastic draws (leaves AND
-    levels); None keeps the legacy fixed tape."""
+    levels); None keeps the legacy fixed tape.
+    ``constraint``: optional hereditary constraint spec with
+    ``bind(ids)`` (core.constraints.KnapsackSpec) applied at the leaves
+    AND every accumulation node."""
     node_engine = node_engine or engine
 
     def fn(ids, payloads, valid, *aug):
@@ -214,13 +229,16 @@ def greedyml_shmap_fn(objective, k: int, tree_axes: Sequence[str],
                 _leaf_key(seed),
                 _machine_flat_id(tree_axes, radices))
         s_prev = greedy(objective, ids, payloads, valid, k,
-                        sample=sample_leaf, key=leaf_key, engine=engine)
+                        sample=sample_leaf, key=leaf_key, engine=engine,
+                        constraint=(constraint.bind(ids)
+                                    if constraint is not None else None))
 
         # ---- accumulation levels ------------------------------------------
         s_prev = accumulate_levels(objective, s_prev, k, tree_axes, radices,
                                    aug_levels=aug[0] if aug else None,
                                    sample_level=sample_level,
-                                   node_engine=node_engine, seed=seed)
+                                   node_engine=node_engine, seed=seed,
+                                   constraint=constraint)
         return _broadcast_from_root(s_prev, tree_axes, radices)
 
     return fn
@@ -233,7 +251,8 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
                          sample_leaf: int = 0, sample_level: int = 0,
                          engine: str = "auto",
                          node_engine: Optional[str] = None,
-                         seed: Optional[int] = None) -> Solution:
+                         seed: Optional[int] = None,
+                         constraint=None) -> Solution:
     """Run distributed GreedyML over `mesh`.
 
     ids/payloads/valid: leading dim n sharded over `tree_axes` (outermost
@@ -241,7 +260,9 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
     optional (L, A, …) per-level extra evaluation elements (k-medoid §6.4),
     replicated. ``seed``: static int reseeding the stochastic-greedy
     draws; None keeps the legacy fixed tape, so unseeded runs reproduce
-    older results bit-for-bit.
+    older results bit-for-bit. ``constraint``: optional hereditary
+    constraint spec (core.constraints.KnapsackSpec) bound per pool at the
+    leaves and every accumulation node (replicated on every lane).
     """
     radices = [mesh.shape[a] for a in tree_axes]
     data_spec = P(tuple(reversed(tree_axes)))
@@ -253,7 +274,8 @@ def greedyml_distributed(objective, ids: jax.Array, payloads: jax.Array,
     fn = greedyml_shmap_fn(objective, k, tree_axes, radices,
                            sample_leaf=sample_leaf,
                            sample_level=sample_level, engine=engine,
-                           node_engine=node_engine, seed=seed)
+                           node_engine=node_engine, seed=seed,
+                           constraint=constraint)
     out = shard_map(fn, mesh=mesh,
                     in_specs=tuple(in_specs),
                     out_specs=Solution(P(), P(), P(), P(), P()),
@@ -345,6 +367,7 @@ class LevelDispatcher:
     shard: int = 1
     shard_axis: str = "shard"
     tile_c: int = 0
+    constraint: Any = None      # spec with bind(ids), e.g. KnapsackSpec
 
     def __post_init__(self):
         self.radices = tuple(self.radices)
@@ -414,7 +437,9 @@ class LevelDispatcher:
         if self.sample_leaf:
             key = jax.random.fold_in(_leaf_key(self.seed), mid)
         return greedy(self.objective, ids, pay, val, self.k,
-                      sample=self.sample_leaf, key=key, engine=self.engine)
+                      sample=self.sample_leaf, key=key, engine=self.engine,
+                      constraint=(self.constraint.bind(ids)
+                                  if self.constraint is not None else None))
 
     def _shard_leaf_body(self, ids, pay, val):
         return shard_greedy(self.objective, ids, pay, val, self.k,
@@ -476,7 +501,8 @@ class LevelDispatcher:
                 self.objective, sol, self.k, axes, radices, lvl,
                 aug=aug[0] if aug else None,
                 sample_level=self.sample_level,
-                node_engine=self.node_engine, seed=self.seed)
+                node_engine=self.node_engine, seed=self.seed,
+                constraint=self.constraint)
             return out
 
         if self.mesh is None:
@@ -525,12 +551,16 @@ def randgreedi_distributed(objective, ids, payloads, valid, k, mesh,
                            augment=None, engine: str = "auto",
                            node_engine: Optional[str] = None,
                            sample_leaf: int = 0,
-                           seed: Optional[int] = None) -> Solution:
+                           seed: Optional[int] = None,
+                           constraint=None) -> Solution:
     """RandGreedi = GreedyML with a single accumulation level: all machine
     axes form ONE level (gather everything to every lane, one global
     Greedy). Implemented by flattening the axes tuple into one level.
     ``sample_leaf``/``seed`` enable reseedable stochastic greedy at the
-    leaves (as in greedyml_distributed)."""
+    leaves (as in greedyml_distributed). ``constraint``: a spec with
+    ``bind(ids)`` (e.g. KnapsackSpec) — bound to the lane's global ids at
+    the leaf and to the gathered union at the accumulation node, exactly
+    as in greedyml_distributed."""
     radices = [math.prod(mesh.shape[a] for a in machine_axes)]
     node_eng = node_engine or engine
 
@@ -542,7 +572,9 @@ def randgreedi_distributed(objective, ids, payloads, valid, k, mesh,
                 _machine_flat_id(machine_axes,
                                  [mesh.shape[a] for a in machine_axes]))
         s_leaf = greedy(objective, ids_, payloads_, valid_, k,
-                        sample=sample_leaf, key=leaf_key, engine=engine)
+                        sample=sample_leaf, key=leaf_key, engine=engine,
+                        constraint=(constraint.bind(ids_)
+                                    if constraint is not None else None))
         u_ids, u_pay, u_val = s_leaf.ids, s_leaf.payloads, s_leaf.valid
         for ax in machine_axes:
             u_ids = lax.all_gather(u_ids, ax, axis=0, tiled=True)
@@ -555,7 +587,9 @@ def randgreedi_distributed(objective, ids, payloads, valid, k, mesh,
                 [u_val, jnp.ones(aug[0][0].shape[0], bool)], axis=0)
         s_new = greedy(objective, u_ids, u_pay, u_val, k,
                        ground=ground, ground_valid=ground_valid,
-                       engine=node_eng)
+                       engine=node_eng,
+                       constraint=(constraint.bind(u_ids)
+                                   if constraint is not None else None))
         prev_score = replay_value(objective, s_leaf.payloads, s_leaf.valid,
                                   ground, ground_valid)
         s_prev = select_better(

@@ -40,6 +40,11 @@ Built-in registry:
   satcover                    saturated coverage Σ_u min(cap, Σ relu⟨u,v⟩)/N
                               — the spec-only objective: registered as a
                               rule, zero objective- or kernel-specific code
+  graphcut                    coverage − α/2·redundancy² per ground row
+                              (quadratic graph-cut penalty, 'sum' fold)
+  mmr                         λ·relevance + (1−λ)·saturated diversity —
+                              the MMR tradeoff as one exact potential
+                              (retrieval dedup in the serving engine)
 """
 from __future__ import annotations
 
@@ -113,6 +118,15 @@ class RuleObjective:
         if self.rule.is_bitmap:
             return jnp.sum(jax.lax.population_count(state.row)
                            .astype(jnp.int32)).astype(F32)
+        if self.rule.fold == "sum":
+            # W(r) = λ·(r ∧ BIG) + (1−λ)·h(r ∧ cap), h(t) = t − t²/(2·cap)
+            # — the same potential whose increments gain_part emits, so
+            # gain ≡ Δvalue holds bit-for-bit (conformance suite)
+            t = jnp.minimum(state.row, self.rule.cap)
+            w = (self.rule.lam * jnp.minimum(state.row, R.BIG)
+                 + (1.0 - self.rule.lam)
+                 * (t - t * t / (2.0 * self.rule.cap)))
+            return jnp.sum(jnp.where(state.gvalid, w, 0.0)) / state.n_eff
         tot = jnp.sum(jnp.where(state.gvalid, state.row, 0.0))
         if self.rule.fold == "min":
             return state.base - tot / state.n_eff
@@ -273,6 +287,9 @@ _ALIASES = {"kcover": "coverage", "kdom": "coverage",
             "facility_location": "facility"}
 
 DEFAULT_SAT_CAP = 2.0
+DEFAULT_GC_ALPHA = 0.5     # graph-cut redundancy weight (cap = 1/α)
+DEFAULT_MMR_LAM = 0.5      # MMR relevance weight λ
+DEFAULT_MMR_THETA = 2.0    # MMR diversity saturation cap θ
 
 
 def register(name: str, factory: Callable[..., RuleObjective]) -> None:
@@ -307,10 +324,28 @@ def _satcover_factory(universe: int = 0, backend=None,
     return RuleObjective(R.sat_sum(cap), name="satcover", backend=backend)
 
 
+def _graphcut_factory(universe: int = 0, backend=None,
+                      alpha: float = DEFAULT_GC_ALPHA) -> RuleObjective:
+    # graph-cut-style coverage − α/2·redundancy² per ground row — a pure
+    # spec on the 'sum' fold, zero objective- or kernel-specific code
+    return RuleObjective(R.graph_cut(alpha), name="graphcut",
+                         backend=backend)
+
+
+def _mmr_factory(universe: int = 0, backend=None,
+                 lam: float = DEFAULT_MMR_LAM,
+                 theta: float = DEFAULT_MMR_THETA) -> RuleObjective:
+    # MMR relevance–diversity tradeoff (λ modular relevance vs saturated
+    # diversity-aware coverage) — the RAG retrieval-dedup serving spec
+    return RuleObjective(R.mmr(lam, theta), name="mmr", backend=backend)
+
+
 register("coverage", _coverage_factory)
 register("kmedoid", _kmedoid_factory)
 register("facility", _facility_factory)
 register("satcover", _satcover_factory)
+register("graphcut", _graphcut_factory)
+register("mmr", _mmr_factory)
 
 
 def make_objective(name: str, *, universe: int = 0, backend: str = None,

@@ -397,7 +397,8 @@ def count_pallas_dispatches(jaxpr) -> int:
 
 def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
                   bvalid, k: int, eps_log: float, rule: KernelRule,
-                  backend=None, plan: Optional[dict] = None):
+                  backend=None, plan: Optional[dict] = None,
+                  costs=None, spent=None, budget=None):
     """One batch of B arrivals against all L sieve levels in ONE dispatch
     (kernels/stream_filter.py) — the on-chip matrix serves both the
     singleton-gain re-anchor and the admission loop.
@@ -415,12 +416,18 @@ def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
     forced) stores the fixed ground features per-row-quantized — the
     kernel rescale-accumulates on-chip, and the oracle sees identically
     ROUNDED features, so admissions stay bit-identical across backends.
+
+    ``costs`` (B,) f32 / ``spent`` (L,) f32 / ``budget`` () f32 (all
+    three or none) switch admission to the knapsack cost-ratio rule
+    (DESIGN §Constraints) and append the updated per-level spent (L,) to
+    the returned tuple — still one dispatch per batch.
     """
     from repro.kernels.stream_filter import stream_filter_pallas
     bk = _backend(backend)
     l, b = rows.shape[0], batch.shape[0]
     n = rows.shape[1]
     d = None if rule.is_bitmap else ground.shape[1]
+    has_cost = costs is not None
     plan = plan if plan is not None else stream_plan(n, l, b, d,
                                                      backend=backend,
                                                      rule=rule)
@@ -430,13 +437,17 @@ def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
         if quant:
             ground = _quantized_ground(ground.astype(F32))[2]
         mat = ref.pairwise(ground, batch, rule)
-        rows_, values_, counts_, admits, expos_, m_new, expired = \
-            ref.stream_sieve(mat, _cast_row(row0, rule),
-                             _cast_row(rows, rule), values.astype(F32),
-                             counts, expos, m_max, bvalid.astype(F32), k,
-                             eps_log, rule)
-        return (rows_, values_, counts_, admits > 0, expos_, m_new,
-                expired > 0)
+        out = ref.stream_sieve(
+            mat, _cast_row(row0, rule), _cast_row(rows, rule),
+            values.astype(F32), counts, expos, m_max, bvalid.astype(F32),
+            k, eps_log, rule,
+            costs=costs.astype(F32) if has_cost else None,
+            spent=spent.astype(F32) if has_cost else None,
+            budget=budget if has_cost else None)
+        rows_, values_, counts_, admits, expos_, m_new, expired = out[:7]
+        res = (rows_, values_, counts_, admits > 0, expos_, m_new,
+               expired > 0)
+        return res + (out[7],) if has_cost else res
     assert l % RES_TILE_N == 0, \
         f"levels ({l}) must be a multiple of {RES_TILE_N} on Pallas " \
         "backends (SieveStreamer rounds up)"
@@ -464,12 +475,22 @@ def stream_filter(ground, batch, rows, row0, values, counts, expos, m_max,
     exp_ = expos.astype(jnp.int32).reshape(l, 1)
     m_ = m_max.astype(F32).reshape(1, 1)
     bv = _pad_to(bvalid.astype(F32).reshape(1, b), 1, 128, bucket=False)
-    rows_o, vals_o, cnt_o, admits, expos_o, m_o, expired = \
-        stream_filter_pallas(g, bt, r, r0, vals, cnt, exp_, m_, bv, k,
-                             eps_log, rule, interpret=(bk == "interpret"),
-                             gscale=gscale)
-    return (rows_o[:, :n], vals_o[:, 0], cnt_o[:, 0], admits[:, :b] > 0,
-            expos_o[:, 0], m_o[0, 0], expired[:, 0] > 0)
+    cost_kw = {}
+    if has_cost:
+        # pad arrivals carry bvalid = 0, so their (zero) pad cost is inert
+        cost_kw = dict(
+            costs=_pad_to(costs.astype(F32).reshape(1, b), 1, 128,
+                          bucket=False),
+            spent=spent.astype(F32).reshape(l, 1),
+            budget=jnp.asarray(budget, F32).reshape(1, 1))
+    out = stream_filter_pallas(g, bt, r, r0, vals, cnt, exp_, m_, bv, k,
+                               eps_log, rule,
+                               interpret=(bk == "interpret"),
+                               gscale=gscale, **cost_kw)
+    rows_o, vals_o, cnt_o, admits, expos_o, m_o, expired = out[:7]
+    res = (rows_o[:, :n], vals_o[:, 0], cnt_o[:, 0], admits[:, :b] > 0,
+           expos_o[:, 0], m_o[0, 0], expired[:, 0] > 0)
+    return res + (out[7][:, 0],) if has_cost else res
 
 
 # ---------------------------------------------------------------------------
@@ -518,4 +539,8 @@ def masked_col_reduce(mat, col_valid, row, rule: KernelRule):
         inc = jnp.sum(jnp.where(col_valid[None, :],
                                 jnp.maximum(sub, 0.0), 0.0), axis=1)
         return jnp.minimum(row + inc, rule.cap)
+    if rule.fold == "sum":
+        # plain uncapped add — telescopes trivially over the columns
+        return row + jnp.sum(jnp.where(col_valid[None, :],
+                                       jnp.maximum(sub, 0.0), 0.0), axis=1)
     raise KeyError(rule.fold)

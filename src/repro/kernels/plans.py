@@ -421,16 +421,17 @@ def serve_key(rule: KernelRule, n: int, c: int, d: Optional[int],
               backend: str) -> str:
     """Admission-compatibility key for the serving engine, in the style
     of `autotune_key`: queries sharing a key can stack into ONE vmapped
-    resident dispatch. Rule identity includes the name AND cap (satcover
-    queries with different caps bake different kernel constants and must
-    not co-batch). The candidate axis buckets exactly like the resident
+    resident dispatch. Rule identity includes the name, cap AND λ
+    (satcover queries with different caps — or mmr queries with different
+    relevance weights — bake different kernel constants and must not
+    co-batch). The candidate axis buckets exactly like the resident
     kernel pads (queries in one bucket stack losslessly after
     zero-padding), while the trailing payload axis — features D for
     vector rules, universe WORDS for bitmap rules — must match EXACTLY:
     it is a stacking dim of the batched operand, not a padded one."""
     tail = f"w{n}" if rule.is_bitmap else f"d{d}"
-    return (f"{rule.name}|cap{rule.cap}|c{bucket_len(c, 128)}|{tail}"
-            f"|{backend}")
+    return (f"{rule.name}|cap{rule.cap}|lam{rule.lam}"
+            f"|c{bucket_len(c, 128)}|{tail}|{backend}")
 
 
 def serve_plan(rule: KernelRule, n: int, c: int, d: Optional[int],

@@ -104,17 +104,32 @@ def greedy_loop(mat: jax.Array, row: jax.Array, mask: jax.Array, k: int,
     return R.fold_winner(row, col, prev, rule), bests, gains_
 
 
-def sieve_admit(gains_, values, counts, vgrid, ok, k: int):
+def sieve_admit(gains_, values, counts, vgrid, ok, k: int,
+                cost=None, spent=None, budget=None):
     """Sieve-Streaming admission rule (Badanidiyuru et al. 2014), shared
     by the Pallas stream-filter kernel and the jnp oracle so the
     threshold semantics can never drift between them: admit when |S_l| < k
     and the raw gain clears (v_l/2 − f(S_l))/(k − |S_l|). The `gain > 0`
     conjunct only skips zero-gain fills after f(S_l) has already reached
     v_l/2 (threshold ≤ 0), which never lowers the level's final value.
-    Shapes broadcast; all raw units."""
-    remaining = jnp.maximum(k - counts, 1).astype(F32)
-    thresh = (vgrid * 0.5 - values) / remaining
-    return ok & (counts < k) & (gains_ >= thresh) & (gains_ > 0.0)
+    Shapes broadcast; all raw units.
+
+    With ``cost``/``spent``/``budget`` (the knapsack streaming variant,
+    DESIGN §Constraints) admission switches to COST-RATIO thresholding:
+    admit when the gain DENSITY gain/c(e) clears the per-cost-unit
+    residual threshold (v_l/2 − f(S_l))/(B − c(S_l)) and the element fits
+    the remaining budget — compared multiplied-out (gain ≥ thresh·c(e))
+    so the kernel never divides by a per-arrival cost. cost: per-arrival
+    scalar ≥ 0; spent: (L, 1) per-level c(S_l); budget: () B."""
+    if cost is None:
+        remaining = jnp.maximum(k - counts, 1).astype(F32)
+        thresh = (vgrid * 0.5 - values) / remaining
+        return ok & (counts < k) & (gains_ >= thresh) & (gains_ > 0.0)
+    room = jnp.maximum(budget - spent, 0.0)
+    thresh = (vgrid * 0.5 - values) / jnp.maximum(room, 1e-30)
+    fits = (cost > 0.0) & (cost <= room)
+    return (ok & (counts < k) & fits & (gains_ >= thresh * cost)
+            & (gains_ > 0.0))
 
 
 def sieve_reanchor(singletons, bvalid, rows, row0, values, counts, expos,
@@ -158,7 +173,8 @@ def sieve_reanchor(singletons, bvalid, rows, row0, values, counts, expos,
 def stream_sieve(mat: jax.Array, row0: jax.Array, rows: jax.Array,
                  values: jax.Array, counts: jax.Array, expos: jax.Array,
                  m_max: jax.Array, bvalid: jax.Array, k: int,
-                 eps_log: float, rule: KernelRule):
+                 eps_log: float, rule: KernelRule,
+                 costs=None, spent=None, budget=None):
     """Oracle for the batched sieve-streaming kernel
     (kernels/stream_filter.py, DESIGN §Streaming): re-anchor the exponent
     window on the batch's singleton gains, then admit arrivals IN ORDER
@@ -171,8 +187,15 @@ def stream_sieve(mat: jax.Array, row0: jax.Array, rows: jax.Array,
     (L,) i32; expos: (L,) i32 grid exponents (v_l = e^(expos·eps_log));
     m_max: () running max singleton.
 
+    ``costs``/``spent``/``budget`` switch admission to the knapsack
+    cost-ratio rule (see `sieve_admit`): costs (B,) per-arrival, spent
+    (L,) per-level c(S_v) — expired levels reset it with the rest of
+    their state — budget () B. The spent track rides the same sequential
+    loop, so the kernel still runs ONE dispatch per batch.
+
     Returns (rows (L, N), values (L,), counts (L,), admits (L, B) f32
-    0/1, expos (L,), m_new (), expired (L,) f32 0/1).
+    0/1, expos (L,), m_new (), expired (L,) f32 0/1), plus spent (L,)
+    as an extra trailing output in cost mode.
     """
     l, b = rows.shape[0], mat.shape[1]
     part0 = R.gain_part(row0[:, None], mat, rule)          # (N, B)
@@ -183,22 +206,37 @@ def stream_sieve(mat: jax.Array, row0: jax.Array, rows: jax.Array,
         counts.reshape(l, 1), expos.reshape(l, 1).astype(jnp.int32),
         m_max.astype(F32), eps_log)
     vgrid = jnp.exp(expos.astype(F32) * eps_log)           # (L, 1)
+    cost_mode = costs is not None
+    if cost_mode:
+        spent = jnp.where(expired, 0.0,
+                          spent.astype(F32).reshape(l, 1))
+        budget = jnp.asarray(budget, F32)
+    else:
+        spent = jnp.zeros((l, 1), F32)
 
     def body(i, carry):
-        rows, values, counts, admits = carry
+        rows, values, counts, spent, admits = carry
         col = jax.lax.dynamic_slice_in_dim(mat, i, 1, axis=1).T  # (1, N)
         gains_ = R.level_gains(rows, col, rule)                  # (L, 1)
         ok = jax.lax.dynamic_index_in_dim(bvalid, i, keepdims=False) > 0
-        admit = sieve_admit(gains_, values, counts, vgrid, ok, k)
+        if cost_mode:
+            ci = jax.lax.dynamic_index_in_dim(costs.astype(F32), i,
+                                              keepdims=False)
+            admit = sieve_admit(gains_, values, counts, vgrid, ok, k,
+                                cost=ci, spent=spent, budget=budget)
+            spent = spent + jnp.where(admit, ci, 0.0)
+        else:
+            admit = sieve_admit(gains_, values, counts, vgrid, ok, k)
         upd = R.fold_cols(rows, col, rule)
         rows = jnp.where(admit, upd, rows)
         values = values + jnp.where(admit, gains_, 0.0)
         counts = counts + admit.astype(jnp.int32)
         admits = jax.lax.dynamic_update_slice_in_dim(
             admits, admit.astype(F32), i, axis=1)
-        return rows, values, counts, admits
+        return rows, values, counts, spent, admits
 
-    rows, values, counts, admits = jax.lax.fori_loop(
-        0, b, body, (rows, values, counts, jnp.zeros((l, b), F32)))
-    return (rows, values[:, 0], counts[:, 0], admits, expos[:, 0],
-            m_new, expired.astype(F32)[:, 0])
+    rows, values, counts, spent, admits = jax.lax.fori_loop(
+        0, b, body, (rows, values, counts, spent, jnp.zeros((l, b), F32)))
+    out = (rows, values[:, 0], counts[:, 0], admits, expos[:, 0],
+           m_new, expired.astype(F32)[:, 0])
+    return out + (spent[:, 0],) if cost_mode else out

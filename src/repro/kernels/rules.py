@@ -25,6 +25,18 @@ Built-in rules (DESIGN §Objective protocol):
     facility    dot       max      f32 curmax relu(m − r)
     coverage    bits      or       u32 words  popcount(m & ~r)
     satcover    dot       satsum   f32 cursum min(relu(m), cap − r)
+    graphcut    dot       sum      f32 cursum Δh(r; m), h(t) = t − t²/2cap
+    mmr         dot       sum      f32 cursum λ·relu(m) + (1−λ)·Δh(r; m)
+
+The 'sum' fold keeps the UNCAPPED running similarity sum per ground row
+and scores it through the λ-weighted potential W(r) = λ·r + (1−λ)·h(r∧cap)
+with the concave quadratic h(t) = t − t²/(2·cap) clipped at its vertex
+t = cap. The modular λ·r term is pure relevance; h rewards coverage but
+charges a quadratic redundancy penalty (the graph-cut intra-similarity
+term), so λ trades relevance against diversity exactly like MMR. Both
+terms are exact potentials, so gain ≡ Δvalue holds bit-for-bit on every
+tier, and W is concave nondecreasing over a nonnegative modular sum —
+monotone submodular.
 
 'bits' needs no pairwise compute at all: the candidate payloads ARE the
 matrix columns (M[:, c] = bitmap of c, transposed to words-major), which
@@ -59,10 +71,11 @@ class KernelRule:
     cache entry."""
     name: str            # registry key (and the jit cache key)
     pairwise: str        # 'dist' | 'dot' | 'bits'
-    fold: str            # 'min' | 'max' | 'or' | 'satsum'
+    fold: str            # 'min' | 'max' | 'or' | 'satsum' | 'sum'
     row_dtype: str       # 'float32' | 'uint32'
     row_pad: float       # pad value for ground-axis padding (0 gain)
-    cap: float = 0.0     # saturation cap (satsum fold only)
+    cap: float = 0.0     # saturation cap (satsum/sum folds only)
+    lam: float = 0.0     # relevance weight λ ('sum' fold only)
 
     @property
     def dtype(self):
@@ -100,6 +113,34 @@ def sat_sum(cap: float, name: str = "satcover") -> KernelRule:
                       cap=float(cap))
 
 
+@functools.lru_cache(maxsize=None)
+def graph_cut(alpha: float, name: str = "graphcut") -> KernelRule:
+    """Graph-cut rule family: f(S) = Σ_x h(t_x ∧ cap) with the per-row
+    running similarity t_x = Σ_{v∈S} relu⟨x, v⟩ and the concave quadratic
+    h(t) = t − α·t²/2 (cap = 1/α, h's vertex) — the coverage term minus
+    the quadratic redundancy penalty of the classic graph-cut objective,
+    clipped at the vertex so the potential stays monotone. λ = 0: pure
+    diversity-aware coverage. lru_cached so equal α share one jit
+    compile-cache identity."""
+    assert alpha > 0.0, "graph-cut needs a positive redundancy weight"
+    return KernelRule(name, "dot", "sum", "float32", BIG,
+                      cap=1.0 / float(alpha))
+
+
+@functools.lru_cache(maxsize=None)
+def mmr(lam: float, theta: float, name: str = "mmr") -> KernelRule:
+    """MMR-style relevance–diversity rule family:
+    f(S) = Σ_x [λ·t_x + (1−λ)·h(t_x ∧ θ)], t_x the running relu-similarity
+    sum and h(t) = t − t²/(2θ) the saturating coverage term. λ → 1 is the
+    pure modular relevance sum, λ → 0 pure graph-cut-style diversity —
+    the MMR tradeoff as one exact potential (gain ≡ Δvalue on every
+    tier). The RAG retrieval-dedup serving workload rides this spec."""
+    assert 0.0 <= lam <= 1.0, "MMR λ must lie in [0, 1]"
+    assert theta > 0.0, "MMR needs a positive saturation cap θ"
+    return KernelRule(name, "dot", "sum", "float32", BIG,
+                      cap=float(theta), lam=float(lam))
+
+
 def get(name: str) -> KernelRule:
     """Look up a built-in rule by objective name."""
     return _RULES[name]
@@ -126,6 +167,17 @@ def gain_part(row, m, rule: KernelRule):
         return jnp.maximum(m.astype(F32) - row, 0.0)
     if rule.fold == "satsum":
         return jnp.minimum(jnp.maximum(m.astype(F32), 0.0), rule.cap - row)
+    if rule.fold == "sum":
+        # exact potential increment of W(r) = λ·(r ∧ BIG) + (1−λ)·h(r ∧ cap),
+        # h(t) = t − t²/(2·cap): the modular relevance term is clamped at
+        # BIG so pad rows (r = BIG) contribute exactly 0, and t is clamped
+        # BEFORE squaring so the f32 math never sees BIG²
+        inc = jnp.maximum(m.astype(F32), 0.0)
+        mod = jnp.minimum(row + inc, BIG) - jnp.minimum(row, BIG)
+        t0 = jnp.minimum(row, rule.cap)
+        t1 = jnp.minimum(row + inc, rule.cap)
+        sat = (t1 - t0) - (t1 * t1 - t0 * t0) / (2.0 * rule.cap)
+        return rule.lam * mod + (1.0 - rule.lam) * sat
     if rule.fold == "or":
         new = jnp.bitwise_and(m, jnp.bitwise_not(row))
         return jax.lax.population_count(new).astype(F32)
@@ -141,6 +193,10 @@ def fold_cols(row, col, rule: KernelRule):
     if rule.fold == "satsum":
         return jnp.minimum(row + jnp.maximum(col.astype(F32), 0.0),
                            rule.cap)
+    if rule.fold == "sum":
+        # UNCAPPED running similarity sum — the potential W clamps at
+        # score time, not the state (pad rows at BIG stay ≥ BIG)
+        return row + jnp.maximum(col.astype(F32), 0.0)
     if rule.fold == "or":
         return jnp.bitwise_or(row, col)
     raise KeyError(rule.fold)

@@ -51,15 +51,15 @@ F32 = jnp.float32
 
 
 def _body(g, batch_ref, rows_ref, row0_ref, values_ref,
-          counts_ref, expos_ref, m_ref, bvalid_ref,
-          rowsout_ref, valout_ref, cntout_ref, admit_ref, expoout_ref,
-          mout_ref, expired_ref, *,
+          counts_ref, expos_ref, m_ref, bvalid_ref, cost_refs, out_refs, *,
           k: int, eps_log: float, rule: KernelRule):
     bt = batch_ref[...]                                   # (B, D) | (B, W)
     mat = R.matrix_block(g, bt, rule)                     # (N, B), on-chip
     row0 = row0_ref[...]                                  # (1, N)
     bv = bvalid_ref[...].astype(F32)                      # (1, B)
     nb = bt.shape[0]
+    (rowsout_ref, valout_ref, cntout_ref, admit_ref, expoout_ref,
+     mout_ref, expired_ref) = out_refs[:7]
 
     # re-anchor on this batch's singleton gains (vs the empty solution)
     singletons = R.level_gains(row0, mat.T, rule).T       # (1, B)
@@ -68,24 +68,42 @@ def _body(g, batch_ref, rows_ref, row0_ref, values_ref,
         values_ref[...].astype(F32), counts_ref[...],
         expos_ref[...], m_ref[0, 0], eps_log)
     vgrid = jnp.exp(expos.astype(F32) * eps_log)          # (L, 1)
+    cost_mode = cost_refs is not None
+    if cost_mode:
+        costs_ref, spent_ref, budget_ref = cost_refs
+        costs = costs_ref[...].astype(F32)                # (1, B)
+        budget = budget_ref[0, 0]
+        # expired levels restart with an empty (zero-cost) solution
+        spent = jnp.where(expired, 0.0, spent_ref[...].astype(F32))
+    else:
+        costs = budget = None
+        spent = jnp.zeros_like(vgrid)
 
     def body(i, carry):
-        rows, values, counts, admits = carry
+        rows, values, counts, spent, admits = carry
         col = jax.lax.dynamic_slice(mat, (0, i),
                                     (mat.shape[0], 1)).T  # (1, N)
         gains = R.level_gains(rows, col, rule)            # (L, 1)
         ok = jax.lax.dynamic_slice(bv, (0, i), (1, 1))[0, 0] > 0
-        admit = sieve_admit(gains, values, counts, vgrid, ok, k)
+        if cost_mode:
+            ci = jax.lax.dynamic_slice(costs, (0, i), (1, 1))[0, 0]
+            admit = sieve_admit(gains, values, counts, vgrid, ok, k,
+                                cost=ci, spent=spent, budget=budget)
+            spent = spent + jnp.where(admit, ci, 0.0)
+        else:
+            admit = sieve_admit(gains, values, counts, vgrid, ok, k)
         upd = R.fold_cols(rows, col, rule)
         rows = jnp.where(admit, upd, rows)
         values = values + jnp.where(admit, gains, 0.0)
         counts = counts + admit.astype(jnp.int32)
         bcols = jax.lax.broadcasted_iota(jnp.int32, admits.shape, 1)
         admits = jnp.where(bcols == i, admit.astype(F32), admits)
-        return rows, values, counts, admits
+        return rows, values, counts, spent, admits
 
-    carry = (rows, values, counts, jnp.zeros(admit_ref.shape, F32))
-    rows, values, counts, admits = jax.lax.fori_loop(0, nb, body, carry)
+    carry = (rows, values, counts, spent,
+             jnp.zeros(admit_ref.shape, F32))
+    rows, values, counts, spent, admits = jax.lax.fori_loop(0, nb, body,
+                                                            carry)
     rowsout_ref[...] = rows
     valout_ref[...] = values
     cntout_ref[...] = counts
@@ -93,19 +111,26 @@ def _body(g, batch_ref, rows_ref, row0_ref, values_ref,
     expoout_ref[...] = expos
     mout_ref[0, 0] = m_new
     expired_ref[...] = expired.astype(F32)
+    if cost_mode:
+        out_refs[7][...] = spent
 
 
-def _kernel(ground_ref, *refs, k, eps_log, rule):
-    _body(ground_ref[...], *refs, k=k, eps_log=eps_log, rule=rule)
-
-
-def _kernel_quant(ground_ref, gscale_ref, *refs, k, eps_log, rule):
-    # int8 ground features (stream_plan dtype='int8'): the resident
-    # evaluation set is stored at 1 byte/entry and rescaled against its
-    # (1, N) per-row scales on-chip before the shared pairwise op
-    # (arrivals stay f32)
-    g = R.dequant(ground_ref[...], gscale_ref[...])
-    _body(g, *refs, k=k, eps_log=eps_log, rule=rule)
+def _kernel(ground_ref, *refs, k, eps_log, rule, quant, has_cost):
+    refs = list(refs)
+    if quant:
+        # int8 ground features (stream_plan dtype='int8'): the resident
+        # evaluation set is stored at 1 byte/entry and rescaled against
+        # its (1, N) per-row scales on-chip before the shared pairwise op
+        # (arrivals stay f32)
+        g = R.dequant(ground_ref[...], refs.pop(0)[...])
+    else:
+        g = ground_ref[...]
+    main, rest = refs[:8], refs[8:]
+    cost_refs = None
+    if has_cost:
+        cost_refs, rest = tuple(rest[:3]), rest[3:]
+    _body(g, *main, cost_refs, tuple(rest), k=k, eps_log=eps_log,
+          rule=rule)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "eps_log", "rule",
@@ -116,7 +141,8 @@ def stream_filter_pallas(ground: jax.Array, batch: jax.Array,
                          expos: jax.Array, m_max: jax.Array,
                          bvalid: jax.Array, k: int, eps_log: float,
                          rule: KernelRule, interpret: bool = False,
-                         gscale=None):
+                         gscale=None, costs=None, spent=None,
+                         budget=None):
     """Feature rules: ground (N, D), batch (B, D) arrivals. Bitmap rules:
     ground is an ignored placeholder and batch the (B, W) arrival bitmaps
     (N = W). rows: (L, N) level states in the rule's row dtype, row0:
@@ -127,9 +153,16 @@ def stream_filter_pallas(ground: jax.Array, batch: jax.Array,
     `gscale` (1, N) f32 is given, `ground` is int8 per-row-quantized
     storage and the kernel rescales it to f32 on-chip.
 
+    ``costs`` (1, B) f32 / ``spent`` (L, 1) f32 / ``budget`` (1, 1) f32
+    (all three or none) switch admission to the knapsack cost-ratio rule
+    — the per-level spent track rides the same sequential loop, so the
+    batch still costs ONE dispatch — and append spent (L, 1) f32 to the
+    outputs.
+
     Returns (rows (L, N), values (L, 1), counts (L, 1) i32, admits
     (L, B) f32 0/1, expos (L, 1) i32, m_new (1, 1) f32, expired (L, 1)
-    f32 0/1) — ONE dispatch per arrival batch, re-anchor included.
+    f32 0/1[, spent (L, 1) f32]) — ONE dispatch per arrival batch,
+    re-anchor included.
     """
     nb = batch.shape[0]
     l, n = rows.shape
@@ -140,23 +173,30 @@ def stream_filter_pallas(ground: jax.Array, batch: jax.Array,
     assert row0.shape == (1, n) and values.shape == (l, 1)
     assert counts.shape == (l, 1) and expos.shape == (l, 1)
     assert m_max.shape == (1, 1) and bvalid.shape == (1, nb)
-    kernel = _kernel
     operands = [ground, batch, rows, row0, values, counts, expos, m_max,
                 bvalid]
     if gscale is not None:
         assert gscale.shape == (1, ground.shape[0]), gscale.shape
         operands.insert(1, gscale)
-        kernel = _kernel_quant
+    has_cost = costs is not None
+    if has_cost:
+        assert costs.shape == (1, nb) and spent.shape == (l, 1)
+        assert budget.shape == (1, 1)
+        operands += [costs, spent, budget]
+    out_shape = [
+        jax.ShapeDtypeStruct((l, n), rule.dtype),
+        jax.ShapeDtypeStruct((l, 1), F32),
+        jax.ShapeDtypeStruct((l, 1), jnp.int32),
+        jax.ShapeDtypeStruct((l, nb), F32),
+        jax.ShapeDtypeStruct((l, 1), jnp.int32),
+        jax.ShapeDtypeStruct((1, 1), F32),
+        jax.ShapeDtypeStruct((l, 1), F32),
+    ]
+    if has_cost:
+        out_shape.append(jax.ShapeDtypeStruct((l, 1), F32))
     return pl.pallas_call(
-        functools.partial(kernel, k=k, eps_log=eps_log, rule=rule),
-        out_shape=[
-            jax.ShapeDtypeStruct((l, n), rule.dtype),
-            jax.ShapeDtypeStruct((l, 1), F32),
-            jax.ShapeDtypeStruct((l, 1), jnp.int32),
-            jax.ShapeDtypeStruct((l, nb), F32),
-            jax.ShapeDtypeStruct((l, 1), jnp.int32),
-            jax.ShapeDtypeStruct((1, 1), F32),
-            jax.ShapeDtypeStruct((l, 1), F32),
-        ],
+        functools.partial(_kernel, k=k, eps_log=eps_log, rule=rule,
+                          quant=gscale is not None, has_cost=has_cost),
+        out_shape=out_shape,
         interpret=interpret,
     )(*operands)

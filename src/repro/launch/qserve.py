@@ -40,7 +40,13 @@ from repro.serving import Query, QueryEngine, QueueFull, ServeMetrics, \
     TenantSession
 from repro.streaming import stream_select_continuous
 
-OBJ_CYCLE = ("facility", "kmedoid", "coverage", "satcover")
+OBJ_CYCLE = ("facility", "kmedoid", "coverage", "satcover", "mmr")
+
+
+def _fmt_ms(v) -> str:
+    """Latency percentile for printing — None (no completed queries yet)
+    renders as n/a instead of crashing the format spec."""
+    return "n/a" if v is None else f"{v:.1f}ms"
 
 
 def _pool(name, n, d, universe, seed):
@@ -97,14 +103,14 @@ def run(args) -> int:
     print(f"qserve tenants={args.tenants} submitted={n_sub} "
           f"served={snap['total_queries']} batches={snap['total_batches']} "
           f"mean_B={np.mean(sizes):.1f} "
-          f"p50={snap['p50_ms']:.1f}ms p99={snap['p99_ms']:.1f}ms "
+          f"p50={_fmt_ms(snap['p50_ms'])} p99={_fmt_ms(snap['p99_ms'])} "
           f"served_qps={qps_s}")
     for t in sorted(snap["tenants"]):
         s = snap["tenants"][t]
         obj_name = (tenant_objs[int(t[6:])] if t.startswith("tenant")
                     else "?")
         print(f"  {t:>10s} [{obj_name}] served={s['completed']} "
-              f"p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms")
+              f"p50={_fmt_ms(s['p50_ms'])} p99={_fmt_ms(s['p99_ms'])}")
     return 0 if len(results) == n_sub else 1
 
 

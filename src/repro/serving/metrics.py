@@ -14,12 +14,14 @@ import time
 from typing import Dict, List, Optional
 
 
-def percentile(values: List[float], q: float) -> float:
+def percentile(values: List[float], q: float) -> Optional[float]:
     """The q-th percentile (0 ≤ q ≤ 100) by linear interpolation between
     order statistics — enough for latency reporting without pulling
-    numpy into the serving hot path."""
+    numpy into the serving hot path. Returns None for an empty sample:
+    NaN is not representable in strict JSON, so a tenant with zero
+    completed queries must surface as null, not break json.dump."""
     if not values:
-        return float("nan")
+        return None
     xs = sorted(values)
     if len(xs) == 1:
         return xs[0]
@@ -28,6 +30,11 @@ def percentile(values: List[float], q: float) -> float:
     hi = min(lo + 1, len(xs) - 1)
     frac = pos - lo
     return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def _ms(seconds: Optional[float]) -> Optional[float]:
+    """Seconds → milliseconds, passing None (empty sample) through."""
+    return None if seconds is None else seconds * 1e3
 
 
 class ServeMetrics:
@@ -88,8 +95,8 @@ class ServeMetrics:
                 "completed": self._completed.get(tenant, 0),
                 "solo_fallbacks": self._solo.get(tenant, 0),
                 "stream_pushes": self._stream_pushes.get(tenant, 0),
-                "p50_ms": percentile(lat, 50) * 1e3,
-                "p99_ms": percentile(lat, 99) * 1e3}
+                "p50_ms": _ms(percentile(lat, 50)),
+                "p99_ms": _ms(percentile(lat, 99))}
 
     def snapshot(self) -> dict:
         tenants = sorted(set(self._submitted) | set(self._completed)
@@ -104,8 +111,8 @@ class ServeMetrics:
             "total_queries": total,
             "total_batches": len(self.batches),
             "solo_fallbacks": sum(self._solo.values()),
-            "p50_ms": percentile(all_lat, 50) * 1e3,
-            "p99_ms": percentile(all_lat, 99) * 1e3,
+            "p50_ms": _ms(percentile(all_lat, 50)),
+            "p99_ms": _ms(percentile(all_lat, 99)),
             "queries_per_s": (total / window if window > 0 else None),
             "dispatches_per_batch": (
                 [b["dispatches"] for b in self.batches] or None),

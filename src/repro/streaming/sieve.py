@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,10 +61,12 @@ class SieveState:
     ids: jax.Array        # (L, k) i32 admitted element ids (-1 = empty)
     payloads: jax.Array   # (L, k, …) admitted payloads
     evals: jax.Array      # () i32 marginal-gain evaluations
+    spent: Any = None     # (L,) f32 per-level c(S_v) — knapsack mode only
 
     def tree_flatten(self):
         return (self.rows, self.values, self.counts, self.expos,
-                self.m_max, self.ids, self.payloads, self.evals), None
+                self.m_max, self.ids, self.payloads, self.evals,
+                self.spent), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -86,18 +88,26 @@ class SieveStreamer:
 
     For k-medoid/facility pass ``ground``/``ground_valid`` — the fixed
     evaluation set the summary is scored against. Coverage needs neither.
+
+    ``budget`` > 0 enables KNAPSACK streaming (DESIGN §Constraints):
+    ``process_batch`` then takes per-arrival ``costs`` and admission
+    switches to cost-ratio thresholding — admit e into level v when
+    gain(e|S_v)/c(e) ≥ (v/2 − f(S_v))/(B − c(S_v)) and c(S_v) + c(e) ≤ B
+    — with a per-level spent track riding the same single dispatch.
     """
 
     def __init__(self, objective, k: int, eps: float = 0.1,
                  ground: Optional[jax.Array] = None,
                  ground_valid: Optional[jax.Array] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 budget: float = 0.0):
         self.objective = objective
         self.rule = objective.rule
         self.k = int(k)
         self.eps = float(eps)
         self.eps_log = math.log1p(float(eps))
         self.backend = backend
+        self.budget = float(budget)
         self.levels = num_levels(k, eps)
         if self.rule.is_bitmap:
             self.ground = None
@@ -134,22 +144,33 @@ class SieveStreamer:
                           jnp.arange(L, dtype=jnp.int32),
                           jnp.zeros((), F32),
                           jnp.full((L, k), -1, jnp.int32), pay,
-                          jnp.zeros((), jnp.int32))
+                          jnp.zeros((), jnp.int32),
+                          jnp.zeros((L,), F32) if self.budget > 0
+                          else None)
 
     # -- the batched arrival update ------------------------------------------
 
     def process_batch(self, state: SieveState, ids: jax.Array,
-                      payloads: jax.Array, valid: jax.Array) -> SieveState:
+                      payloads: jax.Array, valid: jax.Array,
+                      costs: Optional[jax.Array] = None) -> SieveState:
         """Fold one batch of B arrivals into all L sieve levels — the
         re-anchor (singleton gains + window slide) and the sequential
         admission run in ONE stream-filter dispatch; the host only resets
-        expired solution slots and scatters the admits. jit-safe."""
-        rows, values, counts, admits, expos, m_new, expired = \
-            ops.stream_filter(
-                self.ground, payloads, state.rows, self.row0,
-                state.values, state.counts, state.expos, state.m_max,
-                valid, self.k, self.eps_log, self.rule,
-                backend=self.backend)
+        expired solution slots and scatters the admits. jit-safe.
+        ``costs`` (B,): per-arrival knapsack costs, required iff the
+        streamer was built with a budget."""
+        cost_mode = self.budget > 0
+        assert (costs is not None) == cost_mode, \
+            "per-arrival costs go with a construction-time budget"
+        out = ops.stream_filter(
+            self.ground, payloads, state.rows, self.row0,
+            state.values, state.counts, state.expos, state.m_max,
+            valid, self.k, self.eps_log, self.rule,
+            backend=self.backend, costs=costs,
+            spent=state.spent if cost_mode else None,
+            budget=self.budget if cost_mode else None)
+        rows, values, counts, admits, expos, m_new, expired = out[:7]
+        spent = out[7] if cost_mode else None
         # expired levels were restarted inside the dispatch — clear their
         # solution slots before scattering this batch's admits
         exp_col = expired[:, None]
@@ -164,7 +185,7 @@ class SieveStreamer:
         evals = state.evals + (self.levels
                                * jnp.sum(valid.astype(jnp.int32)))
         return SieveState(rows, values, counts, expos, m_new, new_ids,
-                          new_pay, evals)
+                          new_pay, evals, spent)
 
     # -- extraction ----------------------------------------------------------
 

@@ -58,8 +58,11 @@ class SlidingSieve:
         self._step = jax.jit(jax.vmap(streamer.process_batch,
                                       in_axes=(0, None, None, None)))
 
-    def init(self, payloads: jax.Array) -> WindowState:
-        base = self.streamer.init(payloads)
+    def init(self, payloads=None) -> WindowState:
+        # SieveStreamer.init needs no stream in hand — the streamer knows
+        # its payload tail; `payloads` is accepted for back-compat only
+        del payloads
+        base = self.streamer.init()
         states = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (self.n_ckpt,) + x.shape),
             base)
@@ -79,8 +82,11 @@ class SlidingSieve:
         seen = wstate.seen + nb
         if int(seen) % self.stride == 0:
             oldest = int(np.argmax(np.asarray(ages)))
-            # a fresh slot re-anchors its grid from its own arrivals
-            fresh = self.streamer.init(payloads)
+            # a fresh slot re-anchors its grid from its own FUTURE
+            # arrivals: seeding it from the current batch's payloads (or
+            # the padded tail of a partial batch) would leak pre-roll
+            # state into the new checkpoint, so build it empty
+            fresh = self.streamer.init()
             states = jax.tree.map(lambda s, f: s.at[oldest].set(f),
                                   states, fresh)
             ages = ages.at[oldest].set(0)

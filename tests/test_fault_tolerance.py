@@ -469,6 +469,7 @@ print('MESH-OK', float(clean.value), float(deg.value))
 """
 
 
+@pytest.mark.slow
 def test_supervised_mesh_mode_replay_and_degrade():
     """One dispatch per level over a REAL 8-device mesh (subprocess so the
     in-process test session keeps the single real device): replay is

@@ -389,7 +389,7 @@ def test_registry_complete_and_aliases():
     assert {"coverage", "kmedoid", "facility", "satcover"} <= set(names)
     for name in names:
         obj = _make(name)
-        assert obj.rule.fold in ("min", "max", "or", "satsum")
+        assert obj.rule.fold in ("min", "max", "or", "satsum", "sum")
         hash(obj.rule)                      # rules must be jit-static
     assert make_objective("kcover", universe=64).name == "coverage"
     assert make_objective("kdom", universe=64).name == "coverage"

@@ -305,7 +305,9 @@ def test_empty_session_raises():
 
 
 def test_percentile_interpolation():
-    assert np.isnan(percentile([], 50))
+    # empty sample → None (NOT NaN: NaN would survive into json.dump and
+    # emit invalid JSON for tenants with zero completed queries)
+    assert percentile([], 50) is None
     assert percentile([3.0], 99) == 3.0
     xs = [1.0, 2.0, 3.0, 4.0]
     assert percentile(xs, 0) == 1.0
@@ -331,3 +333,27 @@ def test_metrics_snapshot_with_fake_clock():
     assert snap["dispatches_per_batch"] == [1]
     assert snap["queries_per_s"] == pytest.approx(4.0)
     assert snap["tenants"]["a"]["p50_ms"] == pytest.approx(250.0)
+
+
+def test_snapshot_json_roundtrips_with_empty_tenants():
+    """A tenant that submitted (or streamed) but never completed a query
+    has no latency samples; its percentiles must surface as null so the
+    snapshot stays STRICT-JSON serializable (qserve/bench_serve dump it
+    with json.dump — NaN there is invalid JSON)."""
+    import json
+    m = ServeMetrics(clock=lambda: 0.0)
+    m.submitted("pending")               # zero completed queries
+    m.stream_push("streamer")            # stream-only tenant
+    snap = m.snapshot()
+    text = json.dumps(snap, allow_nan=False)   # raises on any NaN/inf
+    back = json.loads(text)
+    assert back["tenants"]["pending"]["p50_ms"] is None
+    assert back["tenants"]["pending"]["p99_ms"] is None
+    assert back["tenants"]["streamer"]["p50_ms"] is None
+    assert back["p50_ms"] is None and back["p99_ms"] is None
+    # and a mixed snapshot (one live tenant, one empty) still round-trips
+    t0 = m.submitted("live")
+    m.completed("live", t0, batched=True)
+    back = json.loads(json.dumps(m.snapshot(), allow_nan=False))
+    assert back["tenants"]["live"]["p50_ms"] is not None
+    assert back["tenants"]["pending"]["p50_ms"] is None

@@ -325,6 +325,7 @@ print('SHARD-MESH-OK', float(sol.value))
 """
 
 
+@pytest.mark.slow
 def test_sharded_mesh_bit_identical_under_budget():
     """The sharded tier on a REAL 8-device mesh (subprocess so this
     session keeps its single device): selections bit-identical to solo

@@ -222,6 +222,41 @@ def test_window_tracks_drift_better_than_global_tail():
     assert w_oldest >= 256 - 64
 
 
+def test_window_roll_fresh_slot_ignores_batch_contents():
+    """Regression: the slot reset at a stride boundary must be built
+    empty (streamer.init()), NOT re-anchored from the batch that
+    triggered the roll. Seeding it from the current payloads would leak
+    pre-roll state — and with a PARTIAL final batch would even read the
+    padded invalid rows. The fresh slot must be bit-identical to a
+    from-scratch init regardless of what (partially valid) batch rolled
+    it."""
+    stride = batch = 16
+    st, obj, ground = _setup("facility", n=64, batch=batch, seed=3)
+    streamer = SieveStreamer(obj, K, ground=ground, backend="ref")
+    win = SlidingSieve(streamer, 32, stride)
+    wstate = win.init()
+    batches = list(st)
+    # first batch fully valid, second PARTIAL (tail padded invalid) —
+    # both land on stride boundaries, so both trigger a roll
+    for i, (ids, pay, valid) in enumerate(batches[:2]):
+        valid = np.asarray(valid).copy()
+        if i == 1:
+            valid[batch // 2:] = False
+        before = wstate
+        wstate = win.process_batch(before, jnp.asarray(ids),
+                                   jnp.asarray(pay), jnp.asarray(valid))
+        rolled = int(np.nonzero(np.asarray(wstate.ages) == 0)[0][0])
+        fresh = streamer.init()
+        got = jax.tree.map(lambda x, r=rolled: x[r], wstate.states)
+        for name in ("rows", "values", "counts", "expos", "m_max", "ids",
+                     "payloads"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, name)),
+                np.asarray(getattr(fresh, name)),
+                err_msg=f"rolled slot field {name} differs from a "
+                        f"from-scratch init (batch {i})")
+
+
 # ---------------------------------------------------------------------------
 # checkpoint round-trip
 # ---------------------------------------------------------------------------
